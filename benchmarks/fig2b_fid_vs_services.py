@@ -1,0 +1,44 @@
+"""Fig. 2b: mean FID vs. number of services K, all four schemes
+(with the paper's bandwidth allocation applied to every scheme)."""
+
+import numpy as np
+
+from repro.core.baselines import (fixed_size_batching, greedy_batching,
+                                  single_instance)
+from repro.core.bandwidth import pso_allocate
+from repro.core.delay_model import DelayModel
+from repro.core.quality_model import PowerLawFID
+from repro.core.service import make_scenario
+from repro.core.simulator import run_scheme
+from repro.core.stacking import stacking
+
+SCHEMES = [("stacking", stacking), ("single", single_instance),
+           ("greedy", greedy_batching), ("fixed", fixed_size_batching)]
+
+
+def run(csv_rows, ks=(5, 10, 15, 20, 25), seeds=(0, 1, 2)):
+    delay, quality = DelayModel(), PowerLawFID()
+    summary = {}
+    for K in ks:
+        fids = {name: [] for name, _ in SCHEMES}
+        for seed in seeds:
+            scn = make_scenario(K=K, seed=seed)
+            res = pso_allocate(scn, stacking, delay, quality,
+                               num_particles=8, iters=6, seed=seed)
+            for name, sched in SCHEMES:
+                r = run_scheme(scn, sched, delay, quality, res.alloc)
+                fids[name].append(r.mean_fid)
+        for name, _ in SCHEMES:
+            m = float(np.mean(fids[name]))
+            summary[(K, name)] = m
+            csv_rows.append((f"fig2b_K{K}_{name}", m, "mean_fid"))
+    # paper's ordering claims at the largest K
+    K = ks[-1]
+    csv_rows.append(("fig2b_stacking_best",
+                     float(all(summary[(K, 'stacking')]
+                               <= summary[(K, n)] + 1e-9
+                               for n, _ in SCHEMES)), "1=yes"))
+    csv_rows.append(("fig2b_single_worst",
+                     float(summary[(K, 'single')]
+                           >= max(summary[(K, n)]
+                                  for n, _ in SCHEMES) - 1e-9), "1=yes"))

@@ -1,0 +1,51 @@
+"""Benchmark driver: one module per paper figure/table plus the roofline
+and beyond-paper suites.  Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig1a,fig2b,...]
+"""
+
+import argparse
+import sys
+import time
+
+from benchmarks import (ablations, beyond_paper, fig1a_delay_vs_batch,
+                        fig1b_fid_vs_steps, fig2a_e2e_delay,
+                        fig2b_fid_vs_services, fig2c_fid_vs_min_delay,
+                        kernels_bench, roofline_report)
+
+SUITES = {
+    "fig1a": fig1a_delay_vs_batch.run,
+    "fig1b": fig1b_fid_vs_steps.run,
+    "fig2a": fig2a_e2e_delay.run,
+    "fig2b": fig2b_fid_vs_services.run,
+    "fig2c": fig2c_fid_vs_min_delay.run,
+    "roofline": roofline_report.run,
+    "kernels": kernels_bench.run,
+    "beyond": beyond_paper.run,
+    "ablations": ablations.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    names = list(SUITES) if not args.only else args.only.split(",")
+
+    rows = []
+    print("name,us_per_call,derived")
+    for name in names:
+        t0 = time.time()
+        before = len(rows)
+        try:
+            SUITES[name](rows)
+        except Exception as e:   # noqa: BLE001
+            rows.append((f"{name}_ERROR", 0.0, repr(e)[:120]))
+        for r in rows[before:]:
+            print(f"{r[0]},{r[1]:.4f},{r[2]}")
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

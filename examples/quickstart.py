@@ -1,0 +1,76 @@
+"""Quickstart: the paper's full pipeline on one page.
+
+1. Calibrate the delay model g(X) = aX + b on this machine (Fig. 1a).
+2. Build a K-service scenario with heterogeneous deadlines (Sec. IV).
+3. Allocate bandwidth (PSO, Sec. III-C) and schedule batch denoising
+   with STACKING (Alg. 1).
+4. Execute the plan on a real DDIM U-Net with mixed-step batches.
+5. Compare against the paper's three baselines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+
+from repro.configs.ddim_cifar10 import SMOKE
+from repro.core.baselines import (fixed_size_batching, greedy_batching,
+                                  single_instance)
+from repro.core.bandwidth import pso_allocate, tau_prime_of
+from repro.core.delay_model import DelayModel, fit
+from repro.core.quality_model import PowerLawFID
+from repro.core.service import make_scenario
+from repro.core.simulator import run_scheme, simulate
+from repro.core.stacking import stacking
+from repro.diffusion import unet
+from repro.diffusion.executor import BatchDenoisingExecutor
+from repro.models.params import init_params
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+
+    # 1. calibrate g(X) = aX + b on this hardware --------------------------
+    params = init_params(unet.schema(SMOKE), key)
+    executor = BatchDenoisingExecutor(SMOKE, params)
+    curve = executor.measure_delay_curve(key, batch_sizes=[1, 2, 4, 8])
+    measured = fit([c[0] for c in curve], [c[1] for c in curve])
+    print(f"measured delay model: a={measured.a * 1e3:.2f} ms/sample, "
+          f"b={measured.b * 1e3:.2f} ms")
+    # paper constants (RTX-3050) for the simulation below:
+    delay = DelayModel()
+    quality = PowerLawFID()
+
+    # 2. scenario -----------------------------------------------------------
+    scn = make_scenario(K=8, tau_min=4.0, tau_max=12.0, seed=1)
+    print(f"\n{scn.K} services, deadlines "
+          f"{[round(s.deadline, 1) for s in scn.services]}")
+
+    # 3. bandwidth + batch plan ---------------------------------------------
+    res = pso_allocate(scn, stacking, delay, quality,
+                       num_particles=10, iters=8)
+    tp = tau_prime_of(scn, res.alloc)
+    plan = stacking(scn.services, tp, delay, quality)
+    plan.validate(gen_deadlines=tp)
+    print(f"STACKING plan: {plan.num_batches} batches, "
+          f"sizes {plan.batch_sizes()[:12]}...")
+    print(f"steps per service: {dict(sorted(plan.steps_completed.items()))}")
+
+    # 4. execute on the real U-Net -----------------------------------------
+    images, _ = executor.run(plan, jax.random.PRNGKey(7))
+    print(f"generated {len(images)} images, shape "
+          f"{next(iter(images.values())).shape}")
+    sim = simulate(scn, res.alloc, plan, quality)
+    print("\n" + sim.summary())
+
+    # 5. baselines ------------------------------------------------------------
+    print("\nscheme comparison (mean FID, lower is better):")
+    for name, sched in [("stacking", stacking),
+                        ("greedy", greedy_batching),
+                        ("fixed", fixed_size_batching),
+                        ("single", single_instance)]:
+        r = run_scheme(scn, sched, delay, quality, res.alloc)
+        print(f"  {name:10s} {r.mean_fid:8.2f}  (outage {r.outage_rate:.0%})")
+
+
+if __name__ == "__main__":
+    main()

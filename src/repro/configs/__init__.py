@@ -1,0 +1,29 @@
+"""Architecture registry: importing this package registers every assigned
+architecture (plus the paper's own DDIM/CIFAR-10 diffusion config)."""
+
+from repro.configs import (  # noqa: F401
+    xlstm_125m,
+    deepseek_moe_16b,
+    tinyllama_1_1b,
+    codeqwen1_5_7b,
+    minitron_4b,
+    zamba2_2_7b,
+    whisper_tiny,
+    llama_3_2_vision_90b,
+    granite_34b,
+    qwen3_moe_30b_a3b,
+    ddim_cifar10,
+)
+
+ASSIGNED_ARCHS = [
+    "xlstm-125m",
+    "deepseek-moe-16b",
+    "tinyllama-1.1b",
+    "codeqwen1.5-7b",
+    "minitron-4b",
+    "zamba2-2.7b",
+    "whisper-tiny",
+    "llama-3.2-vision-90b",
+    "granite-34b",
+    "qwen3-moe-30b-a3b",
+]

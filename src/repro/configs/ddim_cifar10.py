@@ -1,0 +1,38 @@
+"""The paper's own GenAI substrate: DDIM pretrained on CIFAR-10.
+
+Not part of the assigned-architecture pool; this is the diffusion U-Net the
+paper's batch-denoising measurements (Fig. 1a/1b) are taken from.  Sizes
+follow the DDPM/DDIM CIFAR-10 U-Net (~35M params); the `-smoke` variant is
+what CPU tests/benches instantiate.
+"""
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class UNetConfig:
+    name: str = "ddim-cifar10"
+    image_size: int = 32
+    in_channels: int = 3
+    base_channels: int = 128
+    channel_mults: Tuple[int, ...] = (1, 2, 2, 2)
+    num_res_blocks: int = 2
+    attn_resolutions: Tuple[int, ...] = (16,)
+    num_groups: int = 32
+    dropout: float = 0.0
+    num_train_timesteps: int = 1000
+    dtype: str = "float32"
+
+
+CONFIG = UNetConfig()
+
+SMOKE = UNetConfig(
+    name="ddim-cifar10-smoke",
+    image_size=16,
+    base_channels=32,
+    channel_mults=(1, 2),
+    num_res_blocks=1,
+    attn_resolutions=(8,),
+    num_groups=8,
+)

@@ -1,0 +1,24 @@
+"""Granite-34B-Code [arXiv:2405.04324] — GPT-BigCode style, MQA.
+
+88L d_model=6144 48H (kv=1, multi-query) d_ff=24576 vocab=49152.
+Adaptation: learned absolute positions -> RoPE so the 32k/500k assigned
+shapes are representable (noted in DESIGN.md §7).
+"""
+
+from repro.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="granite-34b",
+    family="dense",
+    num_layers=88,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=1,
+    d_ff=24576,
+    vocab_size=49152,
+    source="arXiv:2405.04324",
+    norm="layernorm",
+    activation="gelu",
+    gated_mlp=False,
+    rope_theta=10000.0,
+))

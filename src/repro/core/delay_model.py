@@ -1,0 +1,68 @@
+"""Per-batch denoising delay model — the paper's Eq. (4):
+
+    g(X) = a * X + b * ||X||_0
+
+a = marginal per-task compute slope, b = fixed overhead (weight
+loading / kernel launch on GPU; weight streaming HBM->VMEM on TPU).
+The paper measures a=0.0240, b=0.3543 s for DDIM/CIFAR-10 on an RTX-3050;
+``fit`` re-derives (a, b) from measurements on any hardware (benchmarks/
+fig1a does this on this container's CPU), and ``tpu_estimate`` derives the
+analytic TPU v5e counterpart from model size / FLOPs (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import numpy as np
+
+# Paper's measured constants (Fig. 1a).
+PAPER_A = 0.0240
+PAPER_B = 0.3543
+
+
+@dataclasses.dataclass(frozen=True)
+class DelayModel:
+    a: float = PAPER_A
+    b: float = PAPER_B
+
+    def g(self, batch_size: int) -> float:
+        """Delay of one denoising batch of the given size (Eq. 4)."""
+        if batch_size <= 0:
+            return 0.0
+        return self.a * batch_size + self.b
+
+    def min_task_delay(self) -> float:
+        return self.g(1)
+
+    def max_steps(self, budget: float) -> int:
+        """T^e in Eq. (16): tasks completable in `budget` seconds assuming
+        dedicated (size-1) batches."""
+        if budget <= 0:
+            return 0
+        return int(budget / (self.a + self.b))
+
+
+def fit(batch_sizes: Sequence[int], delays: Sequence[float]) -> DelayModel:
+    """Least-squares fit of (a, b) — the paper's Fig. 1a fitting step."""
+    x = np.asarray(batch_sizes, dtype=np.float64)
+    y = np.asarray(delays, dtype=np.float64)
+    assert x.shape == y.shape and x.size >= 2
+    A = np.stack([x, np.ones_like(x)], axis=1)
+    (a, b), *_ = np.linalg.lstsq(A, y, rcond=None)
+    return DelayModel(a=float(a), b=float(b))
+
+
+def tpu_estimate(flops_per_sample: float, param_bytes: float,
+                 *, peak_flops: float = 197e12, hbm_bw: float = 819e9,
+                 chips: int = 1, overhead: float = 1.4e-3) -> DelayModel:
+    """Analytic v5e delay model (DESIGN.md §3).
+
+    b ~= weight-streaming floor: every step the full parameter set crosses
+         HBM once regardless of batch size (plus a fixed launch overhead);
+    a ~= per-sample compute slope at peak MXU throughput.
+    """
+    a = flops_per_sample / (peak_flops * chips)
+    b = param_bytes / (hbm_bw * chips) + overhead
+    return DelayModel(a=float(a), b=float(b))

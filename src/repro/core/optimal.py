@@ -1,0 +1,67 @@
+"""Exact reference solver for tiny instances (beyond-paper §Beyond):
+exhaustive search over batch-size sequences to measure STACKING's
+optimality gap on problem (P2).
+
+State: sorted vector of remaining generation budgets; at each decision
+point the server picks how many of the tightest-budget active services to
+batch next (services with the smallest remaining budget are always the
+ones at risk — batching any other subset of the same size is dominated,
+because step counts enter quality symmetrically and budgets only shrink).
+Memoized over (rounded budgets, step counts); exponential worst case, only
+used with K <= 6 and coarse budgets in tests/benchmarks.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Sequence, Tuple
+
+from repro.core.delay_model import DelayModel
+from repro.core.quality_model import QualityModel
+
+
+def optimal_mean_fid(tau_prime: Sequence[float], delay: DelayModel,
+                     quality: QualityModel, max_steps: int = 60,
+                     grid: float = 1e-3) -> float:
+    """Exact minimum mean FID over all batch schedules (small K only)."""
+    K = len(tau_prime)
+    g1 = delay.min_task_delay()
+
+    @functools.lru_cache(maxsize=1_000_000)
+    def best(state: Tuple[Tuple[int, int], ...]) -> float:
+        # state: sorted tuple of (budget_ticks, steps_done)
+        active = [(b, s) for b, s in state if b * grid >= g1]
+        if not active:
+            return sum(quality.fid(s) for _, s in state)
+        # choose a batch = the m tightest active services, m = 1..len
+        active_sorted = sorted(active)
+        inactive = [x for x in state if x[0] * grid < g1]
+        best_v = float("inf")
+        for m in range(1, len(active_sorted) + 1):
+            g = delay.g(m)
+            ticks = int(round(g / grid))
+            # all active budgets shrink; the m tightest gain one step
+            nxt = []
+            for i, (b, s) in enumerate(active_sorted):
+                nb = b - ticks
+                ns = s + 1 if i < m else s
+                if nb * grid < g1 and i < m and b * grid < g:
+                    # cannot afford the batch it was packed into -> it
+                    # wouldn't be packed; skip this m entirely
+                    break
+                nxt.append((max(nb, 0), ns))
+            else:
+                v = best(tuple(sorted(nxt + inactive)))
+                if v < best_v:
+                    best_v = v
+                continue
+            # infeasible m (a packed service couldn't afford the batch)
+        # also allowed: stop now
+        stop_v = sum(quality.fid(s) for _, s in state)
+        best_v = min(best_v, stop_v)
+        return best_v
+
+    state = tuple(sorted(
+        (int(t / grid), 0) for t in tau_prime))
+    # cap steps via budget: irrelevant for small instances
+    return best(state) / K

@@ -1,0 +1,60 @@
+"""AIGC service requests and scenario generation (Sec. II / IV constants).
+
+K devices, deadlines uniform in [tau_min, tau_max] (paper: 7..20 s),
+spectral efficiency eta_k uniform in [5, 10] bit/s/Hz, total bandwidth
+B = 40 kHz, content size S identical across services (one generated
+image; default 3 KiB ~= a 32x32 PNG).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+DEFAULT_BANDWIDTH_HZ = 40_000.0
+DEFAULT_CONTENT_BITS = 3 * 1024 * 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceRequest:
+    id: int
+    deadline: float            # tau_k, end-to-end (s)
+    spectral_eff: float        # eta_k (bit/s/Hz)
+
+    def tx_delay(self, bandwidth_hz: float,
+                 content_bits: float = DEFAULT_CONTENT_BITS) -> float:
+        """D_ct = S / (B_k * eta_k)  (Eqs. 8, 11)."""
+        rate = bandwidth_hz * self.spectral_eff
+        return content_bits / max(rate, 1e-12)
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    services: List[ServiceRequest]
+    total_bandwidth_hz: float = DEFAULT_BANDWIDTH_HZ
+    content_bits: float = DEFAULT_CONTENT_BITS
+
+    @property
+    def K(self) -> int:
+        return len(self.services)
+
+
+def make_scenario(K: int = 20, tau_min: float = 7.0, tau_max: float = 20.0,
+                  eta_min: float = 5.0, eta_max: float = 10.0,
+                  total_bandwidth_hz: float = DEFAULT_BANDWIDTH_HZ,
+                  content_bits: float = DEFAULT_CONTENT_BITS,
+                  seed: int = 0) -> Scenario:
+    rng = np.random.default_rng(seed)
+    services = [
+        ServiceRequest(
+            id=k,
+            deadline=float(rng.uniform(tau_min, tau_max)),
+            spectral_eff=float(rng.uniform(eta_min, eta_max)),
+        )
+        for k in range(K)
+    ]
+    return Scenario(services=services,
+                    total_bandwidth_hz=total_bandwidth_hz,
+                    content_bits=content_bits)

@@ -1,0 +1,81 @@
+"""DDIM sampling [arXiv:2010.02502] with arbitrary step-subsequences and
+per-sample schedules.
+
+The paper's service model: service k runs T_k denoising steps; DDIM
+supports any sub-sequence of the 1000 training timesteps, so a service
+assigned T_k steps uses the evenly-spaced subsequence of length T_k.
+Quality increases monotonically (with diminishing returns) in T_k — the
+paper's Fig. 1b.
+
+``ddim_step`` is written per-sample-timestep so the batch-denoising
+executor can advance a *mixed* batch (different services, different step
+indices, different schedules) in ONE batched U-Net call.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_betas(num_timesteps: int = 1000, beta_start: float = 1e-4,
+               beta_end: float = 0.02) -> np.ndarray:
+    return np.linspace(beta_start, beta_end, num_timesteps,
+                       dtype=np.float64)
+
+
+def alphas_cumprod(num_timesteps: int = 1000) -> np.ndarray:
+    return np.cumprod(1.0 - make_betas(num_timesteps))
+
+
+def ddim_timesteps(T: int, num_train_timesteps: int = 1000) -> np.ndarray:
+    """Evenly spaced T-step subsequence (descending, t_1 > ... > t_T)."""
+    if T >= num_train_timesteps:
+        return np.arange(num_train_timesteps)[::-1].copy()
+    step = num_train_timesteps / T
+    ts = (np.arange(T) * step).round().astype(np.int64)
+    return ts[::-1].copy()
+
+
+def schedule_table(T: int, num_train_timesteps: int = 1000) -> np.ndarray:
+    """(T+1,) timestep table: entry i = timestep for step index i; the last
+    entry is -1 ("fully denoised")."""
+    ts = ddim_timesteps(T, num_train_timesteps)
+    return np.concatenate([ts, [-1]])
+
+
+def ddim_step(eps_fn, x, t_now, t_next, num_train_timesteps: int = 1000):
+    """One deterministic DDIM update with *per-sample* timesteps.
+
+    x: (B, H, W, C); t_now, t_next: (B,) int32 (t_next = -1 -> alpha_bar=1).
+    eps_fn(x, t) -> predicted noise.
+    """
+    acp = jnp.asarray(alphas_cumprod(num_train_timesteps), jnp.float32)
+    a_now = acp[jnp.clip(t_now, 0)]
+    a_next = jnp.where(t_next < 0, 1.0, acp[jnp.clip(t_next, 0)])
+    eps = eps_fn(x, t_now.astype(jnp.float32))
+    bshape = (-1,) + (1,) * (x.ndim - 1)
+    a_now = a_now.reshape(bshape)
+    a_next = a_next.reshape(bshape)
+    x0 = (x - jnp.sqrt(1.0 - a_now) * eps) / jnp.sqrt(a_now)
+    x_next = jnp.sqrt(a_next) * x0 + jnp.sqrt(1.0 - a_next) * eps
+    # inactive samples (t_now < 0) pass through unchanged
+    active = (t_now >= 0).reshape(bshape)
+    return jnp.where(active, x_next, x)
+
+
+def sample(eps_fn, key, shape: Tuple[int, ...], T: int,
+           num_train_timesteps: int = 1000):
+    """Plain (single-service) DDIM sampling loop: T steps, batch `shape`."""
+    x = jax.random.normal(key, shape, jnp.float32)
+    ts = ddim_timesteps(T, num_train_timesteps)
+    ts_next = np.concatenate([ts[1:], [-1]])
+    B = shape[0]
+    for t_now, t_next in zip(ts, ts_next):
+        tn = jnp.full((B,), t_now, jnp.int32)
+        tx = jnp.full((B,), t_next, jnp.int32)
+        x = ddim_step(eps_fn, x, tn, tx, num_train_timesteps)
+    return x

@@ -1,0 +1,111 @@
+"""Flash-decode Pallas TPU kernel: one query token vs. a long KV cache.
+
+Decode attention is HBM-bandwidth-bound (the cache is read once per step,
+arithmetic intensity ~ O(1) FLOPs/byte), so the tiling goal is purely to
+stream the cache through VMEM in large sequential blocks:
+
+  grid = (B, KV, S/bs); the cache-sequence axis is innermost/sequential,
+  the online-softmax state (m, l, acc) lives in VMEM scratch across those
+  iterations.  The G query heads of a KV group ride in one (G, D) tile so
+  each cache block is read once for all of them (GQA's point).  Blocks
+  wholly outside [cur_len - window, cur_len) are skipped with @pl.when —
+  with a sliding window this turns O(S) traffic into O(window).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(cur_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            bs: int, scale: float, window: int, ns: int):
+    b = pl.program_id(0)
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    cur = cur_ref[b]
+    s_start = si * bs
+    needed = s_start < cur
+    if window:
+        needed = jnp.logical_and(needed, s_start + bs - 1 >= cur - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)              # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)              # (bs, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (G, bs)
+        pos = s_start + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        valid = pos < cur
+        if window:
+            valid = jnp.logical_and(valid, pos >= cur - window)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(si == ns - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k_cache, v_cache, cur_len, *,
+                            window: int = 0, bs: int = 512,
+                            interpret: bool = False):
+    """q: (B, 1, H, D); caches: (B, S, KV, D); cur_len: (B,) int32."""
+    B, _, H, D = q.shape
+    _, S, KV, _ = k_cache.shape
+    G = H // KV
+    bs = min(bs, S)
+    assert S % bs == 0
+    ns = S // bs
+    scale = 1.0 / (D ** 0.5)
+    cur = jnp.asarray(cur_len, jnp.int32)
+    if cur.ndim == 0:
+        cur = jnp.full((B,), cur, jnp.int32)
+
+    qt = q.reshape(B, KV, G, D)                          # (B, KV, G, D)
+    kt = jnp.swapaxes(k_cache, 1, 2)                     # (B, KV, S, D)
+    vt = jnp.swapaxes(v_cache, 1, 2)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bs=bs, scale=scale, window=window,
+                          ns=ns),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        grid=(B, KV, ns),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),           # cur_len (SMEM-ish)
+            pl.BlockSpec((1, 1, G, D), lambda b, h, si: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, D), lambda b, h, si: (b, h, si, 0)),
+            pl.BlockSpec((1, 1, bs, D), lambda b, h, si: (b, h, si, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, si: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cur, qt, kt, vt)
+    return out.reshape(B, 1, H, D)

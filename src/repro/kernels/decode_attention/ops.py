@@ -1,0 +1,19 @@
+"""Dispatching wrapper for decode attention."""
+
+from __future__ import annotations
+
+from repro.kernels import use_pallas
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def decode_attention(q, k_cache, v_cache, cur_len, *, window: int = 0):
+    mode = use_pallas()
+    if mode == "tpu":
+        return decode_attention_pallas(q, k_cache, v_cache, cur_len,
+                                       window=window)
+    if mode == "interpret":
+        bs = min(128, k_cache.shape[1])
+        return decode_attention_pallas(q, k_cache, v_cache, cur_len,
+                                       window=window, bs=bs, interpret=True)
+    return decode_attention_ref(q, k_cache, v_cache, cur_len, window=window)

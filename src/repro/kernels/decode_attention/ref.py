@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, cur_len, *, window: int = 0):
+    """q: (B, 1, H, D); caches: (B, S, KV, D); cur_len: (B,) valid entries.
+    Masks positions >= cur_len and (optionally) < cur_len - window."""
+    B, _, H, D = q.shape
+    _, S, KV, _ = k_cache.shape
+    G = H // KV
+    cur = jnp.asarray(cur_len)
+    if cur.ndim == 0:
+        cur = jnp.full((B,), cur)
+    qr = q.reshape(B, KV, G, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qr,
+                   k_cache.astype(jnp.float32)) / jnp.sqrt(D)
+    pos = jnp.arange(S)
+    valid = pos[None] < cur[:, None]
+    if window:
+        valid &= pos[None] >= (cur[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, D).astype(q.dtype)

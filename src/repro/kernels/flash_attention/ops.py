@@ -1,0 +1,19 @@
+"""Dispatching wrapper for flash attention."""
+
+from __future__ import annotations
+
+from repro.kernels import use_pallas
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0):
+    mode = use_pallas()
+    if mode == "tpu":
+        return flash_attention_pallas(q, k, v, causal=causal, window=window)
+    if mode == "interpret":
+        bq = min(128, q.shape[1])
+        bk = min(128, k.shape[1])
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      bq=bq, bk=bk, interpret=True)
+    return attention_ref(q, k, v, causal=causal, window=window)

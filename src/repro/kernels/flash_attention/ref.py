@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for (GQA, causal, optionally sliding-window) attention.
+
+Materializes the full S x S score tensor — correct but O(S^2) memory;
+only for validation at test scales.  The production XLA path is
+``repro.models.layers.chunked_attention`` (same math, online softmax).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, Sq, H, D); k, v: (B, Skv, KV, D); H = KV * G."""
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    qr = q.reshape(B, Sq, KV, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k.astype(jnp.float32))
+    s = s / jnp.sqrt(D)
+    qpos = jnp.arange(Sq)[:, None] + (Skv - Sq)   # align ends (prefill)
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)

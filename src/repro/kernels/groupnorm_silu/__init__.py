@@ -1,0 +1,1 @@
+from repro.kernels.groupnorm_silu.ops import groupnorm_silu  # noqa: F401

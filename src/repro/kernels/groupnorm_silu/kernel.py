@@ -1,0 +1,53 @@
+"""Fused GroupNorm+SiLU Pallas TPU kernel — the diffusion U-Net hot spot.
+
+The U-Net applies GN->SiLU->conv twice per residual block; unfused, each
+GN materializes mean/var intermediates and a normalized tensor in HBM.
+Fused: one VMEM pass per image computes group statistics and writes the
+activated output directly.
+
+Tiling: grid = (B,), block = one full image (H, W, C).  At CIFAR scale a
+(32, 32, 256) f32 image is 1 MB — comfortably VMEM-resident; for larger
+resolutions the grid would add an H-split with a two-pass Welford, which
+this kernel documents as its scaling path (not needed for the paper's
+32x32 workload).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, s_ref, b_ref, o_ref, *, groups: int, eps: float):
+    x = x_ref[0].astype(jnp.float32)                # (H, W, C)
+    H, W, C = x.shape
+    cg = C // groups
+    xg = x.reshape(H * W, groups, cg)
+    mu = xg.mean(axis=(0, 2), keepdims=True)
+    var = ((xg - mu) ** 2).mean(axis=(0, 2), keepdims=True)
+    xn = (xg - mu) * jax.lax.rsqrt(var + eps)
+    out = xn.reshape(H, W, C) * s_ref[...] + b_ref[...]
+    o_ref[0] = (out * jax.nn.sigmoid(out)).astype(o_ref.dtype)
+
+
+def groupnorm_silu_pallas(x, scale, bias, num_groups: int,
+                          eps: float = 1e-6, interpret: bool = False):
+    B, H, W, C = x.shape
+    G = min(num_groups, C)
+    while C % G:
+        G -= 1
+    return pl.pallas_call(
+        functools.partial(_kernel, groups=G, eps=eps),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, H, W, C), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((C,), lambda b: (0,)),
+            pl.BlockSpec((C,), lambda b: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, H, W, C), lambda b: (b, 0, 0, 0)),
+        interpret=interpret,
+    )(x, scale, bias)

@@ -1,0 +1,17 @@
+"""Dispatching wrapper for fused GroupNorm + SiLU."""
+
+from __future__ import annotations
+
+from repro.kernels import use_pallas
+from repro.kernels.groupnorm_silu.kernel import groupnorm_silu_pallas
+from repro.kernels.groupnorm_silu.ref import groupnorm_silu_ref
+
+
+def groupnorm_silu(x, scale, bias, num_groups: int, eps: float = 1e-6):
+    mode = use_pallas()
+    if mode == "tpu":
+        return groupnorm_silu_pallas(x, scale, bias, num_groups, eps)
+    if mode == "interpret":
+        return groupnorm_silu_pallas(x, scale, bias, num_groups, eps,
+                                     interpret=True)
+    return groupnorm_silu_ref(x, scale, bias, num_groups, eps)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for fused GroupNorm + SiLU (NHWC)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def groupnorm_silu_ref(x, scale, bias, num_groups: int, eps: float = 1e-6):
+    B, H, W, C = x.shape
+    G = min(num_groups, C)
+    while C % G:
+        G -= 1
+    xg = x.reshape(B, H, W, G, C // G).astype(jnp.float32)
+    mu = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    out = (xg - mu) * jax.lax.rsqrt(var + eps)
+    out = out.reshape(B, H, W, C) * scale + bias
+    return jax.nn.silu(out).astype(x.dtype)

@@ -1,0 +1,18 @@
+"""Dispatching wrapper for fused RMSNorm."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import use_pallas
+from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    mode = use_pallas()
+    if mode == "tpu":
+        return rmsnorm_pallas(x, scale, eps)
+    if mode == "interpret":
+        return rmsnorm_pallas(x, scale, eps, interpret=True)
+    return rmsnorm_ref(x, scale, eps)

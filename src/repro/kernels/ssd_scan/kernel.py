@@ -1,0 +1,105 @@
+"""Chunked SSD scan Pallas TPU kernel (Mamba2 / mLSTM backbone).
+
+Grid = (B, H, S/Q): chunk axis innermost/sequential; the running state
+(P x N per head) lives in VMEM scratch across chunk iterations.  Within a
+chunk the masked-decay quadratic form runs on the MXU:
+
+    y_off  = (C h_in^T) * e^{cum}                    (Q,P)
+    y_diag = ((C B^T) o decay) @ (x * dt)            (Q,Q)@(Q,P)
+    h_out  = e^{total} h_in + (w * B)^T @ x          (N,Q)@(Q,P)
+
+Q defaults to 128 (MXU-aligned); VMEM per (b,h) program:
+Q*(P+2N)*4B + P*N*4B  ~=  a few hundred KB for the assigned configs
+(zamba2: P=64, N=64; xlstm: P=N=384).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(x_ref, a_ref, b_ref, c_ref, h0_ref, y_ref, hout_ref, h_scr, *,
+            Q: int, nc: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = h0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)          # (Q, P)
+    a = a_ref[0, :, 0].astype(jnp.float32)          # (Q,)
+    b = b_ref[0].astype(jnp.float32)                # (Q, N)
+    c = c_ref[0].astype(jnp.float32)                # (Q, N)
+
+    cum = jnp.cumsum(a)                             # (Q,) inclusive
+    total = cum[-1]
+    h = h_scr[...]                                  # (P, N)
+
+    # off-diagonal: incoming state
+    y_off = jax.lax.dot_general(
+        c, h, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)         # (Q, P)
+    y_off = y_off * jnp.exp(cum)[:, None]
+
+    # intra-chunk quadratic with masked decays
+    scores = jax.lax.dot_general(
+        c, b, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)         # (Q, Q)
+    logdec = cum[:, None] - cum[None, :]
+    iq = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    ik = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    logdec = jnp.where(iq >= ik, logdec, NEG_INF)
+    y_diag = jax.lax.dot_general(
+        scores * jnp.exp(logdec), x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)         # (Q, P)
+    y_ref[0, :, 0] = (y_off + y_diag).astype(y_ref.dtype)
+
+    # state update
+    w = jnp.exp(total - cum)                        # (Q,)
+    h_new = h * jnp.exp(total) + jax.lax.dot_general(
+        x, b * w[:, None], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)         # (P, N)
+    h_scr[...] = h_new
+
+    @pl.when(ci == nc - 1)
+    def _finalize():
+        hout_ref[0, 0] = h_new
+
+
+def ssd_scan_pallas(x, a, bmat, cmat, h0, *, chunk: int = 128,
+                    interpret: bool = False):
+    """x: (B,S,H,P); a: (B,S,H); bmat/cmat: (B,S,N); h0: (B,H,P,N).
+    Returns y (B,S,H,P), h_final (B,H,P,N)."""
+    B, S, H, P = x.shape
+    N = bmat.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    y, h_fin = pl.pallas_call(
+        functools.partial(_kernel, Q=Q, nc=nc),
+        out_shape=(jax.ShapeDtypeStruct((B, S, H, P), x.dtype),
+                   jax.ShapeDtypeStruct((B, H, P, N), jnp.float32)),
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, ci: (b, ci, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda b, h, ci: (b, ci, h)),
+            pl.BlockSpec((1, Q, N), lambda b, h, ci: (b, ci, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, h, ci: (b, ci, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, ci: (b, h, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, ci: (b, ci, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, ci: (b, h, 0, 0)),
+        ),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, a, bmat, cmat, h0)
+    return y, h_fin

@@ -1,0 +1,19 @@
+"""Dispatching wrapper for the SSD chunk scan."""
+
+from __future__ import annotations
+
+from repro.kernels import use_pallas
+from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+def ssd_scan(x, a, bmat, cmat, h0, *, chunk: int = 128):
+    mode = use_pallas()
+    if mode == "tpu":
+        return ssd_scan_pallas(x, a, bmat, cmat, h0, chunk=chunk)
+    if mode == "interpret":
+        return ssd_scan_pallas(x, a, bmat, cmat, h0,
+                               chunk=min(chunk, 32), interpret=True)
+    # XLA path: the chunked jnp implementation in repro.models.ssm
+    from repro.models.ssm import ssd_chunked
+    return ssd_chunked(x, a, bmat, cmat, h0, chunk=chunk)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the SSD scan: naive sequential recurrence.
+
+    h_t = exp(a_t) h_{t-1} + x_t (outer) B_t ;  y_t = C_t . h_t
+
+Shapes: x (B,S,H,P), a (B,S,H) log-decay, b/c (B,S,N) shared across heads.
+Slow (lax.scan over every step) but unambiguous.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, a, bmat, cmat, h0):
+    B, S, H, P = x.shape
+    N = bmat.shape[-1]
+
+    def step(h, t):
+        xt = x[:, t].astype(jnp.float32)             # (B,H,P)
+        at = a[:, t].astype(jnp.float32)             # (B,H)
+        bt = bmat[:, t].astype(jnp.float32)          # (B,N)
+        ct = cmat[:, t].astype(jnp.float32)
+        h = h * jnp.exp(at)[..., None, None] \
+            + jnp.einsum("bhp,bn->bhpn", xt, bt)
+        y = jnp.einsum("bn,bhpn->bhp", ct, h)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h0.astype(jnp.float32), jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h

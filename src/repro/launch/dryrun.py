@@ -1,0 +1,400 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes with ShapeDtypeStruct inputs (no allocation),
+and record memory/cost/collective analysis for the roofline report.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+        --shape decode_32k [--multi-pod] [--out artifacts/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+
+The first two lines above MUST stay the first statements in this module:
+jax locks the device count on first init, and only the dry-run wants 512
+placeholder devices.
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (RunConfig, SHAPES, get_config, list_archs,
+                          sharding_rules_for)
+from repro.launch import shardings as shd
+from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.mesh import make_production_mesh, mesh_axis_sizes
+from repro.models import api
+from repro.models.params import use_rules
+from repro.training import optimizer as opt
+from repro.training.train import make_train_step
+
+# TPU v5e hardware constants (roofline denominators).
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(f64|f32|f16|bf16|f8e4m3|f8e5m2|s64|s32|s16|s8"
+                       r"|u64|u32|u16|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in the optimized HLO."""
+    out = {op: 0 for op in COLLECTIVE_OPS}
+    counts = {op: 0 for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for op in COLLECTIVE_OPS:
+            # match "= <shape> op-name(" but not fused/custom-call names
+            if f" {op}(" in stripped or f" {op}-start(" in stripped:
+                lhs, _, rhs = stripped.partition(f" {op}")
+                args = rhs[rhs.find("("):rhs.find(")") + 1] if ")" in rhs \
+                    else rhs
+                total = sum(_shape_bytes(d, dims)
+                            for d, dims in _SHAPE_RE.findall(args))
+                if total == 0:   # operands referenced without shapes: use lhs
+                    total = sum(_shape_bytes(d, dims)
+                                for d, dims in _SHAPE_RE.findall(lhs))
+                out[op] += total
+                counts[op] += 1
+                break
+    out["total"] = sum(out[op] for op in COLLECTIVE_OPS)
+    out["counts"] = counts
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Per-(arch, shape) run configuration (DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+def run_for(cfg, shape, opt: bool = False) -> RunConfig:
+    decode_window = 0
+    shard_kv_seq = False
+    fsdp = False
+    remat = "none"
+    if shape.kind == "train":
+        fsdp = True
+        remat = "group" if cfg.family in ("vlm", "hybrid", "ssm") \
+            else "block"
+    if shape.name == "long_500k":
+        shard_kv_seq = cfg.family not in ("ssm",)   # xlstm has no kv cache
+        if cfg.family != "ssm":
+            # sub-quadratic requirement: sliding-window decode attention
+            # for every arch with attention layers (DESIGN.md §4)
+            decode_window = 8192
+    if cfg.name == "llama-3.2-vision-90b" and shape.kind != "train":
+        fsdp = True        # 180 GB bf16 / 16-way model = 11 GB/chip: too big
+    kwargs = {}
+    if opt:
+        # §Perf change set (all semantics-preserving; tests/test_perf_variants)
+        kwargs = dict(prefill_logits="last",
+                      decode_inplace_cache=(shape.kind == "decode"),
+                      # dynamic-slicing a SHARDED cache seq axis lowers to
+                      # a cross-shard halo exchange that materializes full
+                      # f32 buffers (measured: 5x regression) -- only slice
+                      # when the cache is seq-replicated
+                      decode_slice_reads=bool(decode_window)
+                      and not shard_kv_seq,
+                      decode_uniform_pos=(shape.kind == "decode"),
+                      prefill_parallel_q=(shape.kind == "prefill"
+                                          and cfg.num_heads % 16 != 0))
+    return RunConfig(fsdp=fsdp, remat=remat, decode_window=decode_window,
+                     shard_kv_seq=shard_kv_seq, **kwargs)
+
+
+def rules_for(cfg, shape, run, mesh, opt: bool = False):
+    sizes = mesh_axis_sizes(mesh)
+    rules = sharding_rules_for(cfg, sizes, run)
+    data_ways = sizes.get("data", 1) * sizes.get("pod", 1)
+    if shape.global_batch % data_ways:
+        rules["batch"] = None                 # e.g. long_500k batch=1
+    if shape.kind == "train":
+        rules["seq"] = ("model",)             # Megatron-style seq parallel
+    if opt and shape.kind == "prefill" and rules.get("heads") is None \
+            and "model" in sizes:
+        # attention heads unshardable (minitron 24H/8KV, whisper 6H on a
+        # 16-way model axis => attention fully replicated): shard the
+        # SEQUENCE over the model axis instead -- flash-style q-block
+        # parallelism; k/v all-gather per layer is the traded collective
+        rules["seq"] = ("model",)
+    if opt and shape.kind == "decode" and rules.get("kv_heads") is None \
+            and "model" in sizes:
+        # kv heads unshardable (e.g. tinyllama kv=4 on a 16-way model
+        # axis): flash-decode-shard the cache SEQUENCE over the model axis
+        # instead; softmax reductions lower to psum (§Perf).  Measured
+        # 3.8-31x on decode_32k; do NOT stack onto an already data-sharded
+        # sequence (long_500k) -- 256-way seq sharding of a B=1 cache
+        # regressed 2-3x (cross-shard write/reduce overheads).
+        if not (rules.get("kv_seq") or ()):
+            rules["kv_seq"] = ("model",)
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+def build_step(cfg, shape, run):
+    if shape.kind == "train":
+        step = make_train_step(cfg, run)
+
+        def train_step(params, opt_state, batch):
+            return step(params, opt_state, batch["tokens"], batch["labels"],
+                        batch.get("extras"))
+        return train_step
+    if shape.kind == "prefill":
+        pre = api.make_prefill_step(cfg, run, max_len=shape.seq_len)
+
+        def prefill_step(params, batch):
+            return pre(params, batch["tokens"], batch.get("extras"))
+        return prefill_step
+    dec = api.make_decode_step(cfg, run)
+
+    def serve_step(params, batch):
+        return dec(params, batch["token"], batch["cache"],
+                   batch.get("extras"))
+    return serve_step
+
+
+def lower_one(arch: str, shape_name: str, multi_pod: bool,
+              extra_rules: dict = None, opt: bool = False):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    run = run_for(cfg, shape, opt=opt)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for(cfg, shape, run, mesh, opt=opt)
+    if extra_rules:
+        rules.update(extra_rules)
+
+    params_abs = api.abstract_model(cfg, jnp.bfloat16)
+    batch_abs = api.input_specs(cfg, shape, run, abstract=True)
+    p_pspec = shd.model_param_pspecs(cfg, rules, run.fsdp)
+    b_pspec = shd.input_pspecs(cfg, shape, run, rules)
+
+    step = build_step(cfg, shape, run)
+    with mesh:
+        with use_rules(rules):
+            if shape.kind == "train":
+                opt_abs = {
+                    "step": jax.ShapeDtypeStruct((), jnp.int32),
+                    "m": jax.tree_util.tree_map(
+                        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32),
+                        params_abs),
+                    "v": jax.tree_util.tree_map(
+                        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32),
+                        params_abs),
+                }
+                o_pspec = shd.opt_state_pspecs(cfg, rules, run.fsdp)
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(shd.to_shardings(mesh, p_pspec),
+                                  shd.to_shardings(mesh, o_pspec),
+                                  shd.to_shardings(mesh, b_pspec)),
+                    out_shardings=(shd.to_shardings(mesh, p_pspec),
+                                   shd.to_shardings(mesh, o_pspec),
+                                   None),
+                )
+                lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+            else:
+                # decode: donate the cache so KV updates lower in-place
+                # (production serving semantics; avoids a defensive
+                # full-cache copy every step)
+                donate = (1,) if shape.kind == "decode" else ()
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(shd.to_shardings(mesh, p_pspec),
+                                  shd.to_shardings(mesh, b_pspec)),
+                    donate_argnums=donate,
+                )
+                lowered = jitted.lower(params_abs, batch_abs)
+            compiled = lowered.compile()
+    return cfg, shape, run, mesh, lowered, compiled
+
+
+def analyze(arch: str, shape_name: str, multi_pod: bool,
+            extra_rules: dict = None, opt: bool = False) -> dict:
+    t0 = time.time()
+    cfg, shape, run, mesh, lowered, compiled = lower_one(
+        arch, shape_name, multi_pod, extra_rules, opt=opt)
+    compile_s = time.time() - t0
+    chips = mesh.devices.size
+
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes":
+                getattr(mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:   # noqa: BLE001 - backend-dependent
+        mem_info = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    # Trip-count-aware re-analysis: XLA:CPU cost_analysis counts while
+    # bodies once (scan-over-layers would be undercounted by L) and counts
+    # a full-buffer touch per dynamic-update-slice (KV writes would be
+    # overcounted by S).  hlo_cost fixes both; raw numbers kept alongside.
+    # For decode shapes, also classify XLA:CPU copy-insertion artifacts on
+    # the donated cache buffers (in-place on TPU): whitelist = per-shard
+    # byte size of each cache leaf.
+    artifact_sizes = None
+    if shape.kind == "decode":
+        rules = rules_for(cfg, shape, run, mesh, opt=opt)
+        cache_abs = api.input_specs(cfg, shape, run,
+                                    abstract=True)["cache"]
+        cache_spec = shd.cache_pspecs(cfg, run, rules)
+        from jax.sharding import PartitionSpec as _PS
+        msizes = mesh_axis_sizes(mesh)
+        sizes = []
+        for leaf, spec in zip(
+                jax.tree_util.tree_leaves(cache_abs),
+                jax.tree_util.tree_leaves(
+                    cache_spec,
+                    is_leaf=lambda x: isinstance(x, _PS))):
+            shards = 1
+            for part in spec:
+                for ax in ((part,) if isinstance(part, str)
+                           else (part or ())):
+                    shards *= msizes.get(ax, 1)
+            n = 1
+            for d in leaf.shape:
+                n *= d
+            sizes.append(n * leaf.dtype.itemsize // shards)
+        artifact_sizes = [x for x in sizes if x >= 8e6]
+    corr = analyze_hlo(hlo, artifact_sizes=artifact_sizes)
+
+    # NOTE on normalization: the SPMD module is per-partition, so all HLO
+    # numbers below are per-chip.
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    n_params = cfg.param_count()
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        model_flops = 6.0 * n_active * tokens
+    else:
+        model_flops = 2.0 * n_active * tokens
+
+    compute_s = corr["flops"] / PEAK_FLOPS         # per-chip
+    memory_s = corr["bytes"] / HBM_BW
+    collective_s = corr["collective_bytes"] / ICI_BW
+    # TPU-adjusted: subtract XLA:CPU copy-insertion artifacts on
+    # while-carried cache buffers (in-place on the real target; see
+    # hlo_cost._model_alias_artifact_bytes)
+    memory_s_tpu = max(corr["bytes"] - corr.get("alias_artifact_bytes",
+                                                0.0), 0.0) / HBM_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    useful = (model_flops / chips) / corr["flops"] if corr["flops"] else 0.0
+
+    return {
+        "arch": arch, "shape": shape_name, "opt": opt,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "kind": shape.kind,
+        "run": dataclasses.asdict(run),
+        "compile_seconds": round(compile_s, 1),
+        "hlo_flops_per_chip": corr["flops"],
+        "hlo_bytes_per_chip": corr["bytes"],
+        "collective_bytes_per_chip": corr["collective_bytes"],
+        "collectives": {"counts": corr["collective_counts"]},
+        "raw_cost_analysis": {
+            "flops": flops, "bytes_accessed": bytes_accessed,
+            "collective_bytes_textparse": coll["total"],
+            "note": "uncorrected XLA numbers (while bodies counted once)",
+        },
+        "memory_analysis": mem_info,
+        "roofline": {**terms, "dominant": dominant,
+                     "memory_s_tpu_adjusted": memory_s_tpu,
+                     "alias_artifact_bytes":
+                         corr.get("alias_artifact_bytes", 0.0)},
+        "model_flops_total": model_flops,
+        "model_flops_per_chip": model_flops / chips,
+        "useful_flops_ratio": useful,
+        "params": n_params, "active_params": n_active,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="apply the §Perf change set (beyond-paper)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = list_archs() if args.all or not args.arch else [args.arch]
+    archs = [a for a in archs if a != "ddim-cifar10"]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if (args.both_meshes or
+                               (args.all and not args.multi_pod)) \
+        else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                tag = f"{arch}_{shape_name}_{'2x16x16' if mp else '16x16'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip] {tag}")
+                    continue
+                print(f"[lower+compile] {tag} ...", flush=True)
+                try:
+                    rec = analyze(arch, shape_name, mp, opt=args.opt)
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    r = rec["roofline"]
+                    print(f"  ok in {rec['compile_seconds']}s  "
+                          f"compute {r['compute_s']:.3e}s  "
+                          f"memory {r['memory_s']:.3e}s  "
+                          f"coll {r['collective_s']:.3e}s  "
+                          f"dominant={r['dominant']}", flush=True)
+                except Exception as e:   # noqa: BLE001
+                    failures.append((tag, repr(e)))
+                    print(f"  FAIL: {e}\n{traceback.format_exc()}",
+                          flush=True)
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for tag, err in failures:
+            print(f"  {tag}: {err[:200]}")
+        raise SystemExit(1)
+    print("\nall dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

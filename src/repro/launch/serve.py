@@ -1,0 +1,82 @@
+"""Serving launcher: deadline-aware batched decoding with STACKING.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --smoke --requests 6 [--deadlines 0.2,0.5,1.0]
+
+Submits synthetic prompts with heterogeneous deadlines, calibrates the
+decode delay model on this hardware (the paper's Fig.-1a procedure),
+plans token budgets with STACKING (Alg. 1), executes the plan with
+batched decode steps, and reports per-request outcomes vs. greedy
+batching.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.config import RunConfig, get_config, smoke_variant
+from repro.core.baselines import greedy_batching
+from repro.core.service import ServiceRequest
+from repro.models import api
+from repro.serving.engine import ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--deadlines", default="",
+                    help="comma-separated seconds; default random 0.2-1.5")
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    params = api.init_model(cfg, jax.random.PRNGKey(0))
+    run = RunConfig()
+    extras = api.extra_input_specs(cfg, 1, abstract=False)
+    eng = ServingEngine(cfg, params, run, max_len=args.max_len,
+                        extras=extras)
+
+    print("calibrating decode delay model...")
+    dm = eng.measure_decode_delay(batch_sizes=(1, 2, 4))
+    print(f"  g(X) = {dm.a * 1e3:.2f}ms * X + {dm.b * 1e3:.2f}ms")
+
+    rng = np.random.default_rng(args.seed)
+    if args.deadlines:
+        deadlines = [float(x) for x in args.deadlines.split(",")]
+    else:
+        deadlines = sorted(rng.uniform(0.2, 1.5, args.requests).tolist())
+    ids = [eng.submit(rng.integers(0, cfg.vocab_size,
+                                   args.prompt_len).astype(np.int32), d)
+           for d in deadlines]
+
+    plan = eng.plan()
+    plan.validate()
+    t0 = time.time()
+    out = eng.execute(plan)
+    wall = time.time() - t0
+    print(f"\nexecuted {plan.num_batches} batches in {wall:.2f}s wall")
+    print(f"{'req':>4} {'deadline':>9} {'tokens':>7}")
+    for rid, d in zip(ids, deadlines):
+        print(f"{rid:>4} {d:9.2f} {len(out[rid]):7d}")
+
+    svcs = [ServiceRequest(id=i, deadline=d, spectral_eff=1.0)
+            for i, d in enumerate(deadlines)]
+    tp = {s.id: s.deadline for s in svcs}
+    greedy = greedy_batching(svcs, tp, eng.delay)
+    q_st = eng.quality.mean_fid(list(plan.steps_completed.values()))
+    q_gr = eng.quality.mean_fid(list(greedy.steps_completed.values()))
+    print(f"\nmean quality penalty: stacking={q_st:.3f} greedy={q_gr:.3f}")
+
+
+if __name__ == "__main__":
+    main()

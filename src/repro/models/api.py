@@ -1,0 +1,132 @@
+"""Unified model API: every assigned architecture exposes
+
+    schema(cfg)                          parameter schema (declarative)
+    forward(cfg, params, tokens, run, extras, collect_kv)
+    prefill(cfg, params, tokens, max_len, run, extras)
+    decode_step(cfg, params, token, cache, run, extras)
+    init_cache(cfg, batch, max_len, run, abstract)
+
+plus framework-level helpers here: model lookup, input_specs (the
+ShapeDtypeStruct stand-ins used by the dry-run), and smoke-scale
+end-to-end step functions.
+"""
+
+from __future__ import annotations
+
+import types
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, RunConfig, ShapeConfig
+from repro.models import transformer, whisper, xlstm_model, zamba2
+from repro.models.params import abstract_params, init_params, param_pspecs
+
+
+def get_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return transformer
+    if cfg.family == "audio":
+        return whisper
+    if cfg.family == "hybrid":
+        return zamba2
+    if cfg.family == "ssm":
+        return xlstm_model
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def extra_input_specs(cfg: ModelConfig, batch: int, abstract: bool = True,
+                      dtype=jnp.bfloat16):
+    """Modality-frontend STUBS (the one allowed carve-out): precomputed
+    frame/patch embeddings with the correct shapes."""
+    extras = {}
+    if cfg.family == "audio":
+        shape = (batch, cfg.num_audio_frames, cfg.d_model)
+        extras["audio_frames"] = (jax.ShapeDtypeStruct(shape, dtype)
+                                  if abstract else jnp.zeros(shape, dtype))
+    if cfg.family == "vlm":
+        shape = (batch, cfg.num_vision_tokens, cfg.d_model)
+        extras["vision_embeds"] = (jax.ShapeDtypeStruct(shape, dtype)
+                                   if abstract else
+                                   0.02 * jnp.ones(shape, dtype))
+    return extras or None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, run: RunConfig,
+                abstract: bool = True):
+    """ShapeDtypeStruct stand-ins for every model input of a step function.
+
+    train  -> {tokens, labels, extras...}
+    prefill-> {tokens, extras...}
+    decode -> {token (B,1), cache (seq_len), extras...}
+    """
+    B, S = shape.global_batch, shape.seq_len
+    mod = get_model(cfg)
+
+    def arr(shp, dt):
+        return (jax.ShapeDtypeStruct(shp, dt) if abstract
+                else jnp.zeros(shp, dt))
+
+    specs = {}
+    if shape.kind == "train":
+        specs["tokens"] = arr((B, S), jnp.int32)
+        specs["labels"] = arr((B, S), jnp.int32)
+    elif shape.kind == "prefill":
+        specs["tokens"] = arr((B, S), jnp.int32)
+    else:  # decode: ONE new token against a seq_len cache
+        specs["token"] = arr((B, 1), jnp.int32)
+        specs["cache"] = mod.init_cache(cfg, B, S, run, abstract=abstract)
+    extras = extra_input_specs(cfg, B, abstract=abstract)
+    if extras:
+        specs["extras"] = extras
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Step functions (shared by smoke tests, the dry-run and the launchers)
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, run: RunConfig):
+    mod = get_model(cfg)
+
+    def loss_fn(params, tokens, labels, extras=None):
+        logits, aux, _ = mod.forward(cfg, params, tokens, run, extras)
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None],
+                                   axis=-1)[..., 0]
+        nll = (logz - gold).mean()
+        return nll + aux, nll
+
+    return loss_fn
+
+
+def make_prefill_step(cfg: ModelConfig, run: RunConfig, max_len: int):
+    mod = get_model(cfg)
+
+    def step(params, tokens, extras=None):
+        return mod.prefill(cfg, params, tokens, max_len, run, extras)
+
+    return step
+
+
+def make_decode_step(cfg: ModelConfig, run: RunConfig):
+    mod = get_model(cfg)
+
+    def step(params, token, cache, extras=None):
+        return mod.decode_step(cfg, params, token, cache, run, extras)
+
+    return step
+
+
+def init_model(cfg: ModelConfig, key, dtype=jnp.float32):
+    return init_params(get_model(cfg).schema(cfg), key, dtype)
+
+
+def abstract_model(cfg: ModelConfig, dtype=jnp.bfloat16):
+    return abstract_params(get_model(cfg).schema(cfg), dtype)
+
+
+def model_pspecs(cfg: ModelConfig, rules: dict):
+    return param_pspecs(get_model(cfg).schema(cfg), rules)

@@ -1,0 +1,115 @@
+"""KV-cache storage helpers.
+
+Supports bf16 (default) and int8 (beyond-paper memory optimization:
+symmetric per-(position, head) quantization — halves decode HBM traffic,
+the dominant roofline term for the decode shapes).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def alloc(batch: int, max_len: int, kv_heads: int, head_dim: int,
+          dtype_str: str = "bfloat16", abstract: bool = False):
+    """One direction (k or v) of a single layer-stacked cache is allocated
+    by the caller; this allocates an unstacked (B, S, KV, D) buffer."""
+    shape = (batch, max_len, kv_heads, head_dim)
+    if dtype_str == "int8":
+        if abstract:
+            return {"q": jax.ShapeDtypeStruct(shape, jnp.int8),
+                    "s": jax.ShapeDtypeStruct(shape[:-1], jnp.float32)}
+        return {"q": jnp.zeros(shape, jnp.int8),
+                "s": jnp.zeros(shape[:-1], jnp.float32)}
+    dt = jnp.bfloat16 if dtype_str == "bfloat16" else jnp.float32
+    if abstract:
+        return jax.ShapeDtypeStruct(shape, dt)
+    return jnp.zeros(shape, dt)
+
+
+def write(cache, new, pos):
+    """Write new (B, S_new, KV, D) at positions pos (B,) .. pos+S_new."""
+    B, S_new = new.shape[0], new.shape[1]
+    idx = pos[:, None] + jnp.arange(S_new)[None]          # (B, S_new)
+    b_idx = jnp.arange(B)[:, None]
+    if isinstance(cache, dict):                            # int8
+        scale = jnp.max(jnp.abs(new.astype(jnp.float32)),
+                        axis=-1) / 127.0                   # (B,S_new,KV)
+        q = jnp.round(new.astype(jnp.float32)
+                      / jnp.maximum(scale, 1e-8)[..., None]).astype(jnp.int8)
+        return {"q": cache["q"].at[b_idx, idx].set(q, mode="drop"),
+                "s": cache["s"].at[b_idx, idx].set(scale, mode="drop")}
+    return cache.at[b_idx, idx].set(new.astype(cache.dtype), mode="drop")
+
+
+def read(cache):
+    """Return a dense (B, S, KV, D) view (dequantized if int8)."""
+    if isinstance(cache, dict):
+        return cache["q"].astype(jnp.float32) * cache["s"][..., None]
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Layer-stacked in-place variants (decode_inplace_cache): the cache keeps
+# its (lead..., B, S, KV, D) stacked layout and lives in the layer-scan
+# CARRY; writes scatter one token slice, reads dynamic-slice one layer.
+# ---------------------------------------------------------------------------
+
+def write_layer(cache_all, lead_idx, new, pos, uniform: bool = False):
+    """cache_all: (lead..., B, S, KV, D); lead_idx: tuple of (traced) layer
+    indices; new: (B, S_new, KV, D); pos: (B,) write positions.
+
+    uniform=True: all batch rows share pos[0] (serve_step semantics) --
+    lowers to one contiguous dynamic-update-slice instead of a scatter.
+    (XLA:CPU expands bf16 scatters through a full-buffer f32 round trip;
+    DUS is in-place on every backend.  §Perf.)"""
+    if isinstance(cache_all, dict):
+        scale = jnp.max(jnp.abs(new.astype(jnp.float32)), axis=-1) / 127.0
+        q = jnp.round(new.astype(jnp.float32)
+                      / jnp.maximum(scale, 1e-8)[..., None]).astype(jnp.int8)
+        return {"q": write_layer(cache_all["q"], lead_idx, q, pos, uniform),
+                "s": _write_layer_arr(cache_all["s"], lead_idx, scale, pos,
+                                      uniform)}
+    return _write_layer_arr(cache_all, lead_idx, new.astype(cache_all.dtype),
+                            pos, uniform)
+
+
+def _write_layer_arr(buf, lead_idx, new, pos, uniform: bool = False):
+    B, S_new = new.shape[0], new.shape[1]
+    if uniform:
+        upd = new
+        for _ in lead_idx:
+            upd = upd[None]
+        zero = jnp.zeros((), jnp.int32)
+        start = (*[jnp.asarray(i, jnp.int32) for i in lead_idx],
+                 zero, pos[0].astype(jnp.int32)) + (zero,) * (new.ndim - 2)
+        return jax.lax.dynamic_update_slice(buf, upd.astype(buf.dtype),
+                                            start)
+    idx = pos[:, None] + jnp.arange(S_new)[None]          # (B, S_new)
+    b_idx = jnp.arange(B)[:, None]
+    return buf.at[(*lead_idx, b_idx, idx)].set(new, mode="drop")
+
+
+def layer_view(cache_all, lead_idx):
+    """One layer's (B, S, KV, D) buffer (same storage structure, no
+    dequantization; a dynamic-slice, not a copy of the stack)."""
+    if isinstance(cache_all, dict):
+        return {"q": cache_all["q"][lead_idx],
+                "s": cache_all["s"][lead_idx]}
+    return cache_all[lead_idx]
+
+
+def read_layer(cache_all, lead_idx):
+    """Dense dequantized (B, S, KV, D) view of one layer."""
+    return read(layer_view(cache_all, lead_idx))
+
+
+def slice_window(layer_cache, start, window):
+    """Dynamic-slice a window [start, start+window) along the seq axis of a
+    (B, S, KV, D) layer view (decode_slice_reads)."""
+    def sl(x, seq_axis=1):
+        return jax.lax.dynamic_slice_in_dim(x, start, window, axis=seq_axis)
+    if isinstance(layer_cache, dict):
+        return {"q": sl(layer_cache["q"]), "s": sl(layer_cache["s"])}
+    return sl(layer_cache)

@@ -1,0 +1,411 @@
+"""Shared transformer layer primitives (pure JAX, functional).
+
+Attention is implemented flash-style in pure jnp (chunked online-softmax via
+nested lax.scan) so the lowered HLO never materializes an S x S score tensor
+-- required for the 32k prefill / 4k train shapes to fit, and mirrors the
+Pallas kernel (kernels/flash_attention) which replaces it on real TPUs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import P, constrain, rule_active
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_schema(cfg, d=None):
+    d = d or cfg.d_model
+    if cfg.norm == "rmsnorm":
+        return {"scale": P((d,), (None,), init="ones")}
+    return {"scale": P((d,), (None,), init="ones"),
+            "bias": P((d,), (None,), init="zeros")}
+
+
+def apply_norm(cfg, p, x):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p["scale"])
+    return layernorm(x, p["scale"], p["bias"])
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def _act(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def mlp_schema(cfg, d_ff=None):
+    d, f = cfg.d_model, (d_ff or cfg.d_ff)
+    s = {"up": P((d, f), ("embed", "mlp")),
+         "down": P((f, d), ("mlp", "embed"))}
+    if cfg.gated_mlp:
+        s["gate"] = P((d, f), ("embed", "mlp"))
+    return s
+
+
+def apply_mlp(cfg, p, x):
+    act = _act(cfg.activation)
+    h = x @ p["up"]
+    if cfg.gated_mlp:
+        h = h * act(x @ p["gate"])
+    else:
+        h = act(h)
+    h = constrain(h, ("batch", "seq", "mlp"))
+    return h @ p["down"]
+
+
+# ---------------------------------------------------------------------------
+# Attention projections
+# ---------------------------------------------------------------------------
+
+def attn_schema(cfg, cross=False):
+    d, H, KV, hd = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                    cfg.resolved_head_dim)
+    s = {"wq": P((d, H, hd), ("embed", "heads", "head_dim")),
+         "wk": P((d, KV, hd), ("embed", "kv_heads", "head_dim")),
+         "wv": P((d, KV, hd), ("embed", "kv_heads", "head_dim")),
+         "wo": P((H, hd, d), ("heads", "head_dim", "embed"))}
+    if cfg.use_qkv_bias:
+        s["bq"] = P((H, hd), ("heads", "head_dim"), init="zeros")
+        s["bk"] = P((KV, hd), ("kv_heads", "head_dim"), init="zeros")
+        s["bv"] = P((KV, hd), ("kv_heads", "head_dim"), init="zeros")
+    if cfg.qk_norm:
+        s["q_norm"] = P((hd,), (None,), init="ones")
+        s["k_norm"] = P((hd,), (None,), init="ones")
+    return s
+
+
+def qkv_project(cfg, p, x, kv_x=None, positions=None, rope=True):
+    """Returns q (B,S,H,D), k/v (B,Skv,KV,D)."""
+    kv_x = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"])
+    if cfg.use_qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    if rope and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def out_project(p, o):
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Flash-style chunked attention (full-sequence: train / prefill)
+# ---------------------------------------------------------------------------
+
+def _kernel_mode() -> str:
+    from repro.kernels import use_pallas
+    return use_pallas()
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: int = 0,
+                      q_chunk: int = 512, kv_chunk: int = 512,
+                      q_offset=0, parallel_q: bool = False):
+    """Online-softmax attention without an S x S intermediate.
+
+    q: (B, Sq, H, D);  k, v: (B, Skv, KV, D) with H = KV * q_per_kv.
+    window > 0 masks keys older than `window` positions (sliding window).
+    q_offset: absolute position of q[0] (for cross-chunk causal masks).
+    parallel_q: vectorize over q chunks (one kv scan, q-chunk axis is a
+    pure data dim) instead of an outer sequential scan — this makes the
+    q axis shardable (sequence parallelism for archs whose heads don't
+    divide the model axis; §Perf).  Costs O(nq) more live accumulator
+    memory, so it is only used when the per-shard nq is small.
+    Returns (B, Sq, H, D).
+
+    On a real TPU (or under REPRO_FORCE_PALLAS=1) this dispatches to the
+    Pallas flash-attention kernel; the jnp path below is its XLA fallback
+    and the dry-run/compile-time reference.
+    """
+    mode = _kernel_mode()
+    if mode in ("tpu", "interpret") and q.shape[1] == k.shape[1]:
+        from repro.kernels.flash_attention.kernel import \
+            flash_attention_pallas
+        bq = min(128, q.shape[1])
+        bk = min(128, k.shape[1])
+        if q.shape[1] % bq == 0 and k.shape[1] % bk == 0:
+            return flash_attention_pallas(
+                q, k, v, causal=causal, window=window, bq=bq, bk=bk,
+                interpret=(mode == "interpret"))
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    sq_valid, skv_valid = Sq, Skv
+    qpad = (-Sq) % q_chunk
+    kpad = (-Skv) % kv_chunk
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+        Sq += qpad
+    if kpad:
+        k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        Skv += kpad
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+    scale = 1.0 / (D ** 0.5)
+
+    qr = q.reshape(B, nq, q_chunk, KV, G, D)
+    kr = k.reshape(B, nk, kv_chunk, KV, D)
+    vr = v.reshape(B, nk, kv_chunk, KV, D)
+
+    q_pos_base = jnp.arange(q_chunk)
+    k_pos_base = jnp.arange(kv_chunk)
+
+    if parallel_q:
+        # all q chunks ride as one batched axis through a single kv scan
+        qp = qr                                             # (B,nq,qc,KV,G,D)
+        qpos = (q_offset + jnp.arange(nq)[:, None] * q_chunk
+                + q_pos_base[None])                         # (nq, qc)
+
+        def kv_block_all(acc, ki):
+            m, l, o = acc
+            kc, vc = kr[:, ki], vr[:, ki]                   # (B,kc,KV,D)
+            kpos = ki * kv_chunk + k_pos_base               # (kc,)
+            s = jnp.einsum("bnqhgd,bkhd->bnhgqk", qp, kc,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((nq, q_chunk, kv_chunk), bool)
+            if kpad:
+                mask &= (kpos < skv_valid)[None, None, :]
+            if causal:
+                mask &= qpos[..., None] >= kpos[None, None, :]
+            if window:
+                mask &= (qpos[..., None] - kpos[None, None, :]) < window
+            s = jnp.where(mask[None, :, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            pexp = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + pexp.sum(axis=-1)
+            o_new = (o * alpha[..., None]
+                     + jnp.einsum("bnhgqk,bkhd->bnhgqd", pexp,
+                                  vc.astype(jnp.float32)))
+            return (m_new, l_new, o_new), None
+
+        init = (jnp.full((B, nq, KV, G, q_chunk), NEG_INF, jnp.float32),
+                jnp.zeros((B, nq, KV, G, q_chunk), jnp.float32),
+                jnp.zeros((B, nq, KV, G, q_chunk, D), jnp.float32))
+        (m, l, o), _ = jax.lax.scan(kv_block_all, init, jnp.arange(nk))
+        o = o / jnp.maximum(l[..., None], 1e-30)
+        # (B,nq,KV,G,qc,D) -> (B,nq,qc,KV,G,D)
+        out = jnp.transpose(o, (0, 1, 4, 2, 3, 5)).reshape(B, Sq, H, D)
+        if qpad:
+            out = out[:, :sq_valid]
+        return out.astype(q.dtype)
+
+    def q_block(carry, qi):
+        qc = qr[:, qi]                                       # (B,qc,KV,G,D)
+        qpos = q_offset + qi * q_chunk + q_pos_base          # (qc,)
+
+        def kv_block(acc, ki):
+            m, l, o = acc
+            kc, vc = kr[:, ki], vr[:, ki]                    # (B,kc,KV,D)
+            kpos = ki * kv_chunk + k_pos_base                # (kc,)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if kpad:
+                mask &= (kpos < skv_valid)[None, :]
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window:
+                mask &= (qpos[:, None] - kpos[None, :]) < window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))           # (B,KV,G,qc)
+            alpha = jnp.exp(m - m_new)
+            pexp = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + pexp.sum(axis=-1)
+            o_new = (o * alpha[..., None]
+                     + jnp.einsum("bhgqk,bkhd->bhgqd", pexp,
+                                  vc.astype(jnp.float32)))
+            return (m_new, l_new, o_new), None
+
+        init = (jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32),
+                jnp.zeros((B, KV, G, q_chunk), jnp.float32),
+                jnp.zeros((B, KV, G, q_chunk, D), jnp.float32))
+        (m, l, o), _ = jax.lax.scan(kv_block, init, jnp.arange(nk))
+        o = o / jnp.maximum(l[..., None], 1e-30)
+        # (B,KV,G,qc,D) -> (B,qc,KV,G,D)
+        return carry, jnp.transpose(o, (0, 3, 1, 2, 4))
+
+    _, outs = jax.lax.scan(q_block, None, jnp.arange(nq))     # (nq,B,qc,KV,G,D)
+    out = jnp.transpose(outs, (1, 0, 2, 3, 4, 5)).reshape(B, Sq, H, D)
+    if qpad:
+        out = out[:, :sq_valid]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (single query token vs. KV cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, k_cache, v_cache, cur_len, *, window: int = 0):
+    """q: (B, 1, H, D); caches: (B, S, KV, D); cur_len: scalar or (B,)
+    number of valid cache entries *including* the new token already written.
+    Masks positions >= cur_len and (optionally) < cur_len - window.
+    Softmax over the cache axis is sharding-friendly: reductions over a
+    sequence-sharded cache lower to all-reduces (context parallelism).
+
+    On a real TPU (or under REPRO_FORCE_PALLAS=1) this dispatches to the
+    Pallas flash-decode kernel.
+    """
+    mode = _kernel_mode()
+    if mode in ("tpu", "interpret") and not isinstance(k_cache, dict):
+        from repro.kernels.decode_attention.kernel import \
+            decode_attention_pallas
+        bs = min(512, k_cache.shape[1])
+        if k_cache.shape[1] % bs == 0:
+            return decode_attention_pallas(
+                q, k_cache, v_cache, cur_len, window=window, bs=bs,
+                interpret=(mode == "interpret"))
+    B, _, H, D = q.shape
+    _, S, KV, _ = k_cache.shape
+    G = H // KV
+    scale = 1.0 / (D ** 0.5)
+    cur = jnp.asarray(cur_len)
+    if cur.ndim == 0:
+        cur = jnp.full((B,), cur)
+
+    qr = q.reshape(B, KV, G, D)
+    s = jnp.einsum("bhgd,bshd->bhgs", qr, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(S)
+    valid = pos[None, :] < cur[:, None]                       # (B,S)
+    if window:
+        valid &= pos[None, :] >= (cur[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # no materialized f32 cast of the cache: MXU/dot accumulates in f32 via
+    # preferred_element_type (a full-cache f32 convert would double the
+    # dominant HBM-read term of decode; §Perf)
+    o = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def decode_attention_with_new(q, k_cache, v_cache, k_new, v_new, cur_len,
+                              *, window: int = 0):
+    """Decode attention over the PRE-WRITE cache plus the current token
+    handled out-of-band.  Semantically identical to writing the token first
+    and attending over the updated cache, but the cache update is then only
+    consumed by the *next* step — XLA cannot hoist the attention read's
+    dtype-convert across the in-place update (which on CPU materializes an
+    f32 mirror of the whole cache; §Perf).
+
+    q: (B,1,H,D); caches: (B,S,KV,D) with cur_len (B,) valid entries
+    (NOT including the new token); k_new/v_new: (B,1,KV,D).
+    """
+    B, _, H, D = q.shape
+    _, S, KV, _ = k_cache.shape
+    G = H // KV
+    scale = 1.0 / (D ** 0.5)
+    cur = jnp.asarray(cur_len)
+    if cur.ndim == 0:
+        cur = jnp.full((B,), cur)
+
+    qr = q.reshape(B, KV, G, D)
+    s_old = jnp.einsum("bhgd,bshd->bhgs", qr, k_cache,
+                       preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(S)
+    valid = pos[None, :] < cur[:, None]
+    if window:
+        # the new token occupies position cur; window covers
+        # (cur - window, cur] -> old entries >= cur - window + 1
+        valid &= pos[None, :] >= (cur[:, None] - window + 1)
+    s_old = jnp.where(valid[:, None, None, :], s_old, NEG_INF)
+    s_new = jnp.einsum("bhgd,bohd->bhgo", qr, k_new,
+                       preferred_element_type=jnp.float32) * scale
+    s = jnp.concatenate([s_old, s_new], axis=-1)          # (B,KV,G,S+1)
+    p = jax.nn.softmax(s, axis=-1)
+    p_old, p_new = p[..., :S], p[..., S:]
+    o = jnp.einsum("bhgs,bshd->bhgd", p_old.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    o = o + jnp.einsum("bhgo,bohd->bhgd", p_new.astype(v_new.dtype), v_new,
+                       preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_schema(cfg):
+    s = {"tok": P((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                  init="embed")}
+    if not cfg.tie_embeddings:
+        s["head"] = P((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    return s
+
+
+def embed(p, tokens):
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def unembed(cfg, p, x):
+    w = p["tok"].T if cfg.tie_embeddings else p["head"]
+    logits = x @ w
+    # With Megatron-style sequence-parallel activations ("seq" mapped to the
+    # model axis, used for the train shapes) the logits stay seq-sharded;
+    # otherwise shard the vocab dim (both would collide on the model axis).
+    if rule_active("seq"):
+        return constrain(logits, ("batch", "seq", None))
+    return constrain(logits, ("batch", "seq", "vocab"))

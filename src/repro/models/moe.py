@@ -1,0 +1,119 @@
+"""Mixture-of-Experts layer: top-k routing with static per-expert capacity.
+
+TPU-native formulation (GShard/MaxText-style):
+  * tokens are routed *within groups* (group = batch row) so the
+    position-in-expert cumsum runs along an unsharded axis — no collective
+    is needed for routing bookkeeping;
+  * dispatch scatters tokens into a dense (B, E, C, d) buffer (overflow
+    dropped at per-group capacity C); with the batch axis sharded on "data"
+    and the expert axis on "model", the dispatched buffer's resharding
+    lowers to the expected all-to-all;
+  * experts run as one batched einsum sharded on the expert axis;
+  * outputs are combined with the (renormalized) router gates.
+
+Compute matches active-expert FLOPs x capacity_factor rather than the
+dense-dispatch E-times blowup.  Supports DeepSeekMoE shared experts
+(always-on dense experts added to the routed output) [arXiv:2401.06066].
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import P, constrain
+from repro.models.layers import _act
+
+
+def moe_schema(cfg):
+    d, f, E = cfg.d_model, cfg.d_ff_expert, cfg.num_experts
+    s = {
+        "router": P((d, E), ("embed", "experts"), scale=0.02),
+        "up": P((E, d, f), ("experts", "embed", "mlp")),
+        "gate": P((E, d, f), ("experts", "embed", "mlp")),
+        "down": P((E, f, d), ("experts", "mlp", "embed")),
+    }
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        s["shared_up"] = P((d, fs), ("embed", "mlp"))
+        s["shared_gate"] = P((d, fs), ("embed", "mlp"))
+        s["shared_down"] = P((fs, d), ("mlp", "embed"))
+    return s
+
+
+def moe_capacity(cfg, seq_len: int, capacity_factor: float) -> int:
+    E, K = cfg.num_experts, cfg.experts_per_token
+    return max(1, int(seq_len * K * capacity_factor / E))
+
+
+def apply_moe(cfg, p, x, *, capacity_factor: float = 1.25):
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    C = moe_capacity(cfg, S, capacity_factor)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                   # (B, S, E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)           # (B, S, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)               # renormalize
+
+    # Load-balance auxiliary loss (Switch-style), per group then averaged.
+    me = probs.mean(axis=1)                                   # (B, E)
+    sel = jax.nn.one_hot(expert_ids, E, dtype=jnp.float32)    # (B, S, K, E)
+    ce = sel.sum(axis=(1, 2)) / (S * K)                       # (B, E)
+    aux = cfg.router_aux_coef * E * jnp.mean(jnp.sum(me * ce, axis=-1))
+
+    # ---- dispatch (within each group/batch-row) ---------------------------
+    flat_e = expert_ids.reshape(B, S * K)                     # (B, SK)
+    flat_g = gate_vals.reshape(B, S * K)
+    flat_t = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(S), K)[None], (B, S * K))
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)       # (B, SK, E)
+    pos = jnp.take_along_axis(
+        jnp.cumsum(onehot, axis=1) - 1, flat_e[..., None], axis=-1)[..., 0]
+    keep = pos < C
+
+    def scatter_row(e_row, p_row, t_row, g_row, k_row):
+        tok = jnp.full((E, C), S, jnp.int32)                  # S = pad slot
+        tok = tok.at[e_row, p_row].set(
+            jnp.where(k_row, t_row, S), mode="drop")
+        gt = jnp.zeros((E, C), jnp.float32).at[e_row, p_row].set(
+            jnp.where(k_row, g_row, 0.0), mode="drop")
+        return tok, gt
+
+    disp_tok, disp_gate = jax.vmap(scatter_row)(
+        flat_e, pos, flat_t, flat_g, keep)                    # (B, E, C)
+
+    x_pad = jnp.concatenate(
+        [x, jnp.zeros((B, 1, d), x.dtype)], axis=1)           # (B, S+1, d)
+    expert_in = jnp.take_along_axis(
+        x_pad[:, :, None, :],
+        disp_tok.reshape(B, E * C, 1, 1).astype(jnp.int32), axis=1,
+    ).reshape(B, E, C, d)
+    expert_in = constrain(expert_in, ("batch", "experts", None, "embed"))
+
+    act = _act(cfg.activation)
+    h = jnp.einsum("becd,edf->becf", expert_in, p["up"])
+    h = h * act(jnp.einsum("becd,edf->becf", expert_in, p["gate"]))
+    h = constrain(h, ("batch", "experts", None, "mlp"))
+    expert_out = jnp.einsum("becf,efd->becd", h, p["down"])   # (B, E, C, d)
+    expert_out = constrain(expert_out, ("batch", "experts", None, "embed"))
+
+    # ---- combine ----------------------------------------------------------
+    weighted = expert_out.astype(jnp.float32) * disp_gate[..., None]
+
+    def combine_row(tok, w):
+        return jnp.zeros((S + 1, d), jnp.float32).at[
+            tok.reshape(-1)].add(w.reshape(E * C, d))[:S]
+
+    out = jax.vmap(combine_row)(disp_tok, weighted).astype(x.dtype)
+    out = constrain(out, ("batch", "seq", "embed"))
+
+    if cfg.num_shared_experts:
+        sh = jnp.einsum("bsd,df->bsf", x, p["shared_up"])
+        sh = sh * act(jnp.einsum("bsd,df->bsf", x, p["shared_gate"]))
+        out = out + jnp.einsum("bsf,fd->bsd", sh, p["shared_down"])
+
+    return out, aux

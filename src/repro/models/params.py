@@ -1,0 +1,163 @@
+"""Declarative parameter schemas.
+
+A schema is a nested dict whose leaves are ``P(shape, logical_axes,
+init=...)``.  From one schema we derive
+  * ``init_params``      -- materialized random arrays (smoke tests, examples)
+  * ``abstract_params``  -- ShapeDtypeStructs (dry-run: never allocates)
+  * ``param_pspecs``     -- matching PartitionSpec tree from sharding rules
+
+Logical axes are resolved against ``repro.config.sharding_rules_for`` so the
+same model code lowers on any mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """A parameter leaf: shape + logical axis names (same length)."""
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"      # normal | zeros | ones | embed
+    scale: Optional[float] = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_leaf(x) -> bool:
+    return isinstance(x, P)
+
+
+def tree_map_schema(fn, schema):
+    return jax.tree_util.tree_map(fn, schema, is_leaf=_is_leaf)
+
+
+def init_params(schema, key, dtype=jnp.float32):
+    leaves, treedef = jax.tree_util.tree_flatten(schema, is_leaf=_is_leaf)
+    keys = jax.random.split(key, len(leaves))
+
+    def make(p: P, k):
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, dtype)
+        if p.init == "ones":
+            return jnp.ones(p.shape, dtype)
+        if p.init == "embed":
+            return (jax.random.normal(k, p.shape, dtype)
+                    * (p.scale or 0.02)).astype(dtype)
+        fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+        scale = p.scale if p.scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(k, p.shape, jnp.float32) * scale).astype(dtype)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [make(p, k) for p, k in zip(leaves, keys)])
+
+
+def abstract_params(schema, dtype=jnp.bfloat16):
+    return tree_map_schema(
+        lambda p: jax.ShapeDtypeStruct(p.shape, dtype), schema)
+
+
+def param_pspecs(schema, rules: dict):
+    def spec(p: P) -> PartitionSpec:
+        parts = []
+        for ax in p.axes:
+            m = rules.get(ax) if ax is not None else None
+            if m is None:
+                parts.append(None)
+            elif isinstance(m, (tuple, list)):
+                parts.append(m[0] if len(m) == 1 else tuple(m))
+            else:
+                parts.append(m)
+        # dedup: for weights the FIRST occurrence of a mesh axis wins (e.g.
+        # MoE (experts, embed, mlp): expert parallelism outranks the inner
+        # mlp tensor split on the same axis)
+        used = set()
+        for i, part in enumerate(parts):
+            names = (part,) if isinstance(part, str) else tuple(part or ())
+            if any(n in used for n in names):
+                parts[i] = None
+            else:
+                used.update(names)
+        return PartitionSpec(*parts)
+
+    return tree_map_schema(spec, schema)
+
+
+def param_bytes(schema, bytes_per_el=2) -> int:
+    total = 0
+    for p in jax.tree_util.tree_leaves(schema, is_leaf=_is_leaf):
+        total += int(np.prod(p.shape)) * bytes_per_el
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Activation-sharding helper: models call ``constrain(x, ("batch","seq",...))``
+# and the launch layer installs the rules via ``use_rules``.
+# ---------------------------------------------------------------------------
+
+_ACTIVE_RULES: Optional[dict] = None
+
+
+class use_rules:
+    """Context manager installing logical->mesh rules for ``constrain``."""
+
+    def __init__(self, rules: Optional[dict]):
+        self.rules = rules
+
+    def __enter__(self):
+        global _ACTIVE_RULES
+        self._prev = _ACTIVE_RULES
+        _ACTIVE_RULES = self.rules
+        return self
+
+    def __exit__(self, *exc):
+        global _ACTIVE_RULES
+        _ACTIVE_RULES = self._prev
+        return False
+
+
+def rule_active(name: str) -> bool:
+    """True when the installed rules map this logical axis to a mesh axis."""
+    return bool(_ACTIVE_RULES) and _ACTIVE_RULES.get(name) is not None
+
+
+def constrain(x, axes: Tuple[Optional[str], ...]):
+    """Apply with_sharding_constraint from logical axes; no-op without rules
+    or outside a mesh context."""
+    if _ACTIVE_RULES is None:
+        return x
+    parts = []
+    for ax in axes:
+        m = _ACTIVE_RULES.get(ax) if ax is not None else None
+        if m is None:
+            parts.append(None)
+        elif isinstance(m, (tuple, list)):
+            parts.append(m[0] if len(m) == 1 else tuple(m))
+        else:
+            parts.append(m)
+    # A mesh axis may appear only once per spec.  When two logical axes map
+    # to the same mesh axis (e.g. Megatron-style seq-parallel residuals vs.
+    # tensor-parallel inner activations), the LAST logical axis wins — inner
+    # activations keep their tensor sharding and seq is gathered, matching
+    # Megatron sequence-parallel semantics.
+    used = set()
+    for i in range(len(parts) - 1, -1, -1):
+        names = (parts[i],) if isinstance(parts[i], str) else \
+            tuple(parts[i] or ())
+        if any(n in used for n in names):
+            parts[i] = None
+        else:
+            used.update(names)
+    try:
+        return jax.lax.with_sharding_constraint(x, PartitionSpec(*parts))
+    except (ValueError, RuntimeError):
+        return x  # no mesh in scope (pure-CPU smoke tests)

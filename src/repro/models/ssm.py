@@ -1,0 +1,212 @@
+"""Mamba2 (SSD) block — chunked scan for train/prefill, recurrence for decode.
+
+Follows the state-space-duality formulation [Mamba2, arXiv:2405.21060],
+single B/C group (G=1):
+
+    h_t = exp(dt_t * A_h) * h_{t-1} + dt_t * x_t  (outer) B_t     (H, P, N)
+    y_t = C_t . h_t + D_h * x_t
+
+Train/prefill uses a *sequential scan over chunks* (length Q): within a
+chunk the quadratic masked-decay form is used (Q x Q per chunk, never
+S x S), across chunks the state is carried.  This bounds HLO size and peak
+memory regardless of sequence length, which is what makes the 32k prefill
+shape lower.  Decode is the O(1) recurrence above.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import P, constrain
+from repro.models.layers import rmsnorm
+
+NEG_INF = -1e30
+
+
+def ssm_dims(cfg) -> Tuple[int, int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_head_dim
+    return d_in, nheads, cfg.ssm_state
+
+
+def mamba2_schema(cfg):
+    d = cfg.d_model
+    d_in, H, N = ssm_dims(cfg)
+    W = cfg.ssm_conv
+    conv_ch = d_in + 2 * N
+    return {
+        # separate projections so the big (z, x) part shards cleanly on the
+        # model axis while the small (B, C, dt) part stays replicated
+        "in_zx": P((d, 2 * d_in), ("embed", "ssm_inner")),
+        "in_bcdt": P((d, 2 * N + H), ("embed", None)),
+        "conv_w": P((W, conv_ch), (None, None), scale=0.5),
+        "conv_b": P((conv_ch,), (None,), init="zeros"),
+        "A_log": P((H,), (None,), init="zeros"),
+        "dt_bias": P((H,), (None,), init="zeros"),
+        "D": P((H,), (None,), init="ones"),
+        "norm": P((d_in,), (None,), init="ones"),
+        "out": P((d_in, d), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(cfg, p, u):
+    """u: (B, S, d) -> z, xBC (pre-conv), dt."""
+    d_in, H, N = ssm_dims(cfg)
+    zx = u @ p["in_zx"]
+    z, x = jnp.split(zx, 2, axis=-1)                       # (B,S,d_in) each
+    bcdt = u @ p["in_bcdt"]
+    bmat, cmat, dt = jnp.split(bcdt, [N, 2 * N], axis=-1)  # (B,S,N),(B,S,N),(B,S,H)
+    xbc = jnp.concatenate([x, bmat, cmat], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(p, xbc, conv_state=None):
+    """Depthwise causal conv, width W.  xbc: (B, S, C).
+    conv_state: (B, W-1, C) previous inputs (decode) or None (train).
+    Returns (out, new_conv_state)."""
+    W = p["conv_w"].shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], W - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)             # (B, S+W-1, C)
+    out = sum(full[:, i:i + xbc.shape[1]] * p["conv_w"][i]
+              for i in range(W))
+    out = jax.nn.silu(out + p["conv_b"])
+    new_state = full[:, -(W - 1):]
+    return out, new_state
+
+
+def ssd_chunked(xh, dt_a, bmat, cmat, h0, *, chunk: int = 128):
+    """Chunked SSD scan.
+
+    xh:   (B, S, H, P)   inputs (already scaled by dt)
+    dt_a: (B, S, H)      per-step log decay (dt * A, negative)
+    bmat, cmat: (B, S, N) shared across heads (Mamba2 G=1) or
+                (B, S, H, N) per-head (mLSTM keys/queries)
+    h0:   (B, H, P, N)   incoming state
+    Returns y (B, S, H, P), h_final.
+    """
+    B, S, H, Pd = xh.shape
+    N = bmat.shape[-1]
+    per_head = bmat.ndim == 4
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    # Pallas SSD kernel on TPU (shared-BC / Mamba2 form only)
+    from repro.kernels import use_pallas
+    mode = use_pallas()
+    if mode in ("tpu", "interpret") and not per_head and S % Q == 0:
+        from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+        return ssd_scan_pallas(xh, dt_a, bmat, cmat,
+                               h0.astype(jnp.float32), chunk=Q,
+                               interpret=(mode == "interpret"))
+
+    xc = jnp.moveaxis(xh.reshape(B, nc, Q, H, Pd), 1, 0)
+    ac = jnp.moveaxis(dt_a.reshape(B, nc, Q, H), 1, 0)
+    bshape = (B, nc, Q, H, N) if per_head else (B, nc, Q, N)
+    bc = jnp.moveaxis(bmat.reshape(bshape), 1, 0)
+    cc = jnp.moveaxis(cmat.reshape(bshape), 1, 0)
+
+    idx = jnp.arange(Q)
+    tri = idx[:, None] >= idx[None, :]                     # (Q, Q) k <= q
+
+    def chunk_step(h, inp):
+        x_, a_, b_, c_ = inp                               # per-chunk slices
+        b_, c_, x32 = (b_.astype(jnp.float32), c_.astype(jnp.float32),
+                       x_.astype(jnp.float32))
+        cum = jnp.cumsum(a_.astype(jnp.float32), axis=1)   # (B,Q,H) inclusive
+        total = cum[:, -1]                                 # (B,H)
+        # off-diagonal: contribution of the incoming state
+        if per_head:
+            y_off = jnp.einsum("bqhn,bhpn->bqhp", c_, h)
+            scores = jnp.einsum("bqhn,bkhn->bqkh", c_, b_)  # (B,Q,Q,H)
+        else:
+            y_off = jnp.einsum("bqn,bhpn->bqhp", c_, h)
+            scores = jnp.einsum("bqn,bkn->bqk", c_, b_)[..., None]
+        y_off = y_off * jnp.exp(cum)[..., None]            # decay e^{cum_q}
+        # intra-chunk quadratic
+        logdec = cum[:, :, None, :] - cum[:, None, :, :]   # (B,Q,Q,H)
+        logdec = jnp.where(tri[None, :, :, None], logdec, NEG_INF)
+        y_diag = jnp.einsum("bqkh,bkhp->bqhp", scores * jnp.exp(logdec), x32)
+        # state update
+        w = jnp.exp(total[:, None] - cum)                  # (B,Q,H)
+        if per_head:
+            h_new = (h * jnp.exp(total)[..., None, None]
+                     + jnp.einsum("bqhp,bqhn,bqh->bhpn", x32, b_, w))
+        else:
+            h_new = (h * jnp.exp(total)[..., None, None]
+                     + jnp.einsum("bqhp,bqn,bqh->bhpn", x32, b_, w))
+        return h_new, (y_off + y_diag).astype(xh.dtype)
+
+    h_fin, ys = jax.lax.scan(chunk_step, h0.astype(jnp.float32),
+                             (xc, ac, bc, cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, Pd)
+    return y, h_fin
+
+
+def mamba2_forward(cfg, p, u, state=None, *, chunk: int = 128):
+    """Full-sequence forward.  u: (B, S, d).
+    state: None (fresh) or dict(conv, ssm) for continued prefill.
+    Returns y (B, S, d), new_state."""
+    B, S, d = u.shape
+    d_in, H, N = ssm_dims(cfg)
+    Pd = cfg.ssm_head_dim
+
+    z, xbc, dt = _split_proj(cfg, p, u)
+    conv_in = state["conv"] if state is not None else None
+    xbc, conv_state = _causal_conv(p, xbc, conv_in)
+    x, bmat, cmat = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))                 # (H,) < 0
+    dt_a = dt * a                                                # log decay
+
+    xh = x.reshape(B, S, H, Pd)
+    xh_dt = xh.astype(jnp.float32) * dt[..., None]
+    h0 = (state["ssm"] if state is not None
+          else jnp.zeros((B, H, Pd, N), jnp.float32))
+    y, h_fin = ssd_chunked(xh_dt, dt_a, bmat, cmat, h0, chunk=chunk)
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(B, S, d_in).astype(u.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    out = (y @ p["out"]).astype(u.dtype)
+    return out, {"conv": conv_state, "ssm": h_fin}
+
+
+def mamba2_step(cfg, p, u, state):
+    """Single decode step.  u: (B, 1, d).  Returns y (B,1,d), new state."""
+    B, _, d = u.shape
+    d_in, H, N = ssm_dims(cfg)
+    Pd = cfg.ssm_head_dim
+
+    z, xbc, dt = _split_proj(cfg, p, u)
+    xbc, conv_state = _causal_conv(p, xbc, state["conv"])
+    x, bmat, cmat = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,1,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt[:, 0] * a)                                # (B,H)
+
+    xh = x.reshape(B, H, Pd).astype(jnp.float32) * dt[:, 0, :, None]
+    h = state["ssm"]                                             # (B,H,P,N)
+    h = (h * decay[..., None, None]
+         + jnp.einsum("bhp,bn->bhpn", xh, bmat[:, 0].astype(jnp.float32)))
+    y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0].astype(jnp.float32), h)
+    y = y + x.reshape(B, H, Pd).astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B, 1, d_in).astype(u.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["out"], {"conv": conv_state, "ssm": h}
+
+
+def mamba2_init_state(cfg, batch: int, dtype=jnp.float32):
+    d_in, H, N = ssm_dims(cfg)
+    W = cfg.ssm_conv
+    return {
+        "conv": jnp.zeros((batch, W - 1, d_in + 2 * N), dtype),
+        "ssm": jnp.zeros((batch, H, cfg.ssm_head_dim, N), jnp.float32),
+    }

@@ -1,0 +1,409 @@
+"""Generic decoder-only transformer LM covering the dense, MoE and VLM
+(cross-attention) assigned architectures.
+
+Layer weights are *stacked* and the model scans over layers
+(``jax.lax.scan``) so HLO size is layer-count-independent — required to
+compile 88-100 layer configs in the dry-run, and the production-correct
+choice anyway.  The VLM variant scans over *groups* of
+(cross_attn_every - 1) self layers + 1 cross-attn layer.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, RunConfig
+from repro.models import kv_cache
+from repro.models.layers import (
+    apply_mlp, apply_norm, attn_schema, chunked_attention, decode_attention,
+    embed, embed_schema, mlp_schema, norm_schema, out_project, qkv_project,
+    unembed)
+from repro.models.moe import apply_moe, moe_schema
+from repro.models.params import P, constrain, tree_map_schema
+
+
+# ---------------------------------------------------------------------------
+# Schema
+# ---------------------------------------------------------------------------
+
+def stack_schema(sub, n: int):
+    return tree_map_schema(
+        lambda p: P((n,) + p.shape, ("layers",) + p.axes,
+                    init=p.init, scale=p.scale), sub)
+
+
+def _layer_schema(cfg: ModelConfig):
+    s = {"ln1": norm_schema(cfg), "attn": attn_schema(cfg),
+         "ln2": norm_schema(cfg)}
+    if cfg.is_moe:
+        s["moe"] = moe_schema(cfg)
+    else:
+        s["mlp"] = mlp_schema(cfg)
+    return s
+
+
+def _cross_layer_schema(cfg: ModelConfig):
+    return {"ln1": norm_schema(cfg), "attn": attn_schema(cfg),
+            "ln2": norm_schema(cfg), "mlp": mlp_schema(cfg),
+            "gate_attn": P((1,), (None,), init="zeros"),
+            "gate_mlp": P((1,), (None,), init="zeros")}
+
+
+def schema(cfg: ModelConfig):
+    s = {"embed": embed_schema(cfg), "final_norm": norm_schema(cfg)}
+    if cfg.cross_attn_every:
+        n_self = cfg.cross_attn_every - 1
+        n_groups = cfg.num_layers // cfg.cross_attn_every
+        s["groups"] = {
+            "self": stack_schema(stack_schema(_layer_schema(cfg), n_self),
+                                 n_groups),
+            "cross": stack_schema(_cross_layer_schema(cfg), n_groups),
+        }
+    else:
+        s["layers"] = stack_schema(_layer_schema(cfg), cfg.num_layers)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _self_attn_seq(cfg, lp, x, positions, run: RunConfig, window: int = 0,
+                   causal: bool = True):
+    """Full-sequence self attention; returns (out, (k, v))."""
+    q, k, v = qkv_project(cfg, lp, x, positions=positions)
+    o = chunked_attention(q, k, v, causal=causal, window=window,
+                          parallel_q=run.prefill_parallel_q)
+    return out_project(lp, o), (k, v)
+
+
+def _block_seq(cfg, lp, x, positions, run: RunConfig, causal=True,
+               window=0):
+    h, kv = _self_attn_seq(cfg, lp["attn"],
+                           apply_norm(cfg, lp["ln1"], x), positions, run,
+                           window=window, causal=causal)
+    x = x + h
+    x = constrain(x, ("batch", "seq", "embed"))
+    h = apply_norm(cfg, lp["ln2"], x)
+    if cfg.is_moe:
+        h, aux = apply_moe(cfg, lp["moe"], h,
+                           capacity_factor=run.moe_capacity_factor)
+    else:
+        h, aux = apply_mlp(cfg, lp["mlp"], h), 0.0
+    x = x + h
+    return constrain(x, ("batch", "seq", "embed")), aux, kv
+
+
+def _cross_attn_seq(cfg, lp, x, memory):
+    """Cross attention to a precomputed memory (vision/audio tokens)."""
+    h = apply_norm(cfg, lp["ln1"], x)
+    q, k, v = qkv_project(cfg, lp["attn"], h, kv_x=memory, rope=False)
+    o = chunked_attention(q, k, v, causal=False)
+    h = out_project(lp["attn"], o)
+    x = x + jnp.tanh(lp["gate_attn"]) * h
+    h = apply_mlp(cfg, lp["mlp"], apply_norm(cfg, lp["ln2"], x))
+    x = x + jnp.tanh(lp["gate_mlp"]) * h
+    return constrain(x, ("batch", "seq", "embed")), (k, v)
+
+
+def _block_decode(cfg, lp, x, pos, kc, vc, run: RunConfig):
+    """Single-token decode for one layer.  x: (B,1,d); pos: (B,) write index.
+    kc/vc: cache buffers.  Returns (x, aux, new_kc, new_vc)."""
+    h = apply_norm(cfg, lp["ln1"], x)
+    q, k, v = qkv_project(cfg, lp["attn"], h,
+                          positions=pos[:, None].astype(jnp.float32))
+    kc = kv_cache.write(kc, k, pos)
+    vc = kv_cache.write(vc, v, pos)
+    o = _decode_attend(cfg, q, kc, vc, pos, run)
+    x = x + out_project(lp["attn"], o)
+    h = apply_norm(cfg, lp["ln2"], x)
+    if cfg.is_moe:
+        h, aux = apply_moe(cfg, lp["moe"], h,
+                           capacity_factor=run.moe_capacity_factor)
+    else:
+        h, aux = apply_mlp(cfg, lp["mlp"], h), 0.0
+    return x + h, aux, kc, vc
+
+
+def _decode_attend(cfg, q, kc_view, vc_view, pos, run: RunConfig):
+    """Attention over one layer's cache view, honoring decode_slice_reads:
+    with a sliding window, dynamic-slice only the window out of the cache
+    instead of masked full-cache reads (64x less HBM traffic at 500k)."""
+    if run.decode_slice_reads and run.decode_window:
+        S = (kc_view["q"] if isinstance(kc_view, dict) else kc_view).shape[1]
+        w = min(run.decode_window, S)
+        start = jnp.clip(jnp.min(pos) + 1 - w, 0, S - w)
+        kc_view = kv_cache.slice_window(kc_view, start, w)
+        vc_view = kv_cache.slice_window(vc_view, start, w)
+        cur = pos + 1 - start
+        return decode_attention(q, kv_cache.read(kc_view),
+                                kv_cache.read(vc_view), cur,
+                                window=run.decode_window)
+    return decode_attention(q, kv_cache.read(kc_view),
+                            kv_cache.read(vc_view), pos + 1,
+                            window=run.decode_window)
+
+
+def _decode_attend_prewrite(cfg, q, k_old, v_old, k_new, v_new, pos,
+                            run: RunConfig):
+    """Attention over the pre-write cache view + the new token handled
+    out-of-band (layers.decode_attention_with_new).  The updated cache is
+    then only consumed by the NEXT step, so XLA cannot hoist the attention
+    read's dtype-convert across the in-place update (on CPU that hoist
+    materializes an f32 mirror of the whole cache stack; §Perf)."""
+    from repro.models.layers import decode_attention_with_new
+    if run.decode_slice_reads and run.decode_window:
+        S = (k_old["q"] if isinstance(k_old, dict) else k_old).shape[1]
+        w = min(run.decode_window, S)
+        start = jnp.clip(jnp.min(pos) + 1 - w, 0, S - w)
+        k_old = kv_cache.slice_window(k_old, start, w)
+        v_old = kv_cache.slice_window(v_old, start, w)
+        return decode_attention_with_new(
+            q, kv_cache.read(k_old), kv_cache.read(v_old), k_new, v_new,
+            pos - start, window=run.decode_window)
+    return decode_attention_with_new(
+        q, kv_cache.read(k_old), kv_cache.read(v_old), k_new, v_new, pos,
+        window=run.decode_window)
+
+
+def _block_decode_inplace(cfg, lp, x, pos, kc_all, vc_all, lead_idx,
+                          run: RunConfig):
+    """Like _block_decode, but the stacked cache buffers stay in the scan
+    carry and are updated in place (one token-slice write per layer); the
+    attention read uses the pre-write view + the new token out-of-band."""
+    h = apply_norm(cfg, lp["ln1"], x)
+    q, k, v = qkv_project(cfg, lp["attn"], h,
+                          positions=pos[:, None].astype(jnp.float32))
+    k_old = kv_cache.layer_view(kc_all, lead_idx)
+    v_old = kv_cache.layer_view(vc_all, lead_idx)
+    kc_all = kv_cache.write_layer(kc_all, lead_idx, k, pos,
+                                  uniform=run.decode_uniform_pos)
+    vc_all = kv_cache.write_layer(vc_all, lead_idx, v, pos,
+                                  uniform=run.decode_uniform_pos)
+    o = _decode_attend_prewrite(cfg, q, k_old, v_old, k, v, pos, run)
+    x = x + out_project(lp["attn"], o)
+    h = apply_norm(cfg, lp["ln2"], x)
+    if cfg.is_moe:
+        h, aux = apply_moe(cfg, lp["moe"], h,
+                           capacity_factor=run.moe_capacity_factor)
+    else:
+        h, aux = apply_mlp(cfg, lp["mlp"], h), 0.0
+    return x + h, aux, kc_all, vc_all
+
+
+def _cross_attn_decode(cfg, lp, x, ck, cv, memory_len):
+    h = apply_norm(cfg, lp["ln1"], x)
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"])
+    if cfg.use_qkv_bias:
+        q = q + lp["attn"]["bq"]
+    o = decode_attention(q, kv_cache.read(ck), kv_cache.read(cv), memory_len)
+    x = x + jnp.tanh(lp["gate_attn"]) * out_project(lp["attn"], o)
+    h = apply_mlp(cfg, lp["mlp"], apply_norm(cfg, lp["ln2"], x))
+    return x + jnp.tanh(lp["gate_mlp"]) * h
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params, tokens, run: RunConfig,
+            extras: Optional[dict] = None, collect_kv: bool = False,
+            last_only: bool = False):
+    """tokens: (B, S) -> (logits, aux, kvs or None).
+
+    last_only: emit logits for the final position only (prefill_logits=
+    "last": kills the (B, S, V) logits tensor and its collectives).
+
+    kvs (when collect_kv): stacked per-layer (L, B, S, KV, D) pairs — the
+    prefill cache."""
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens)
+    x = constrain(x, ("batch", "seq", "embed"))
+    positions = jnp.arange(S, dtype=jnp.float32)[None]
+
+    window = run.decode_window if run.decode_window else 0
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a, kv = _block_seq(cfg, lp, x, positions, run, window=window)
+        return (x, aux + a), (kv if collect_kv else None)
+
+    if run.remat == "block":
+        body = jax.checkpoint(body)
+
+    if cfg.cross_attn_every:
+        memory = extras["vision_embeds"].astype(x.dtype)
+        n_self = cfg.cross_attn_every - 1
+
+        def group_body(carry, gp):
+            x, aux = carry
+            (x, aux), kvs = jax.lax.scan(body, (x, aux), gp["self"])
+            x, ckv = _cross_attn_seq(cfg, gp["cross"], x, memory)
+            return (x, aux), ((kvs, ckv) if collect_kv else None)
+
+        if run.remat == "group":
+            group_body = jax.checkpoint(group_body)
+        (x, aux), kvs = jax.lax.scan(group_body, (x, 0.0), params["groups"])
+    else:
+        (x, aux), kvs = jax.lax.scan(body, (x, 0.0), params["layers"])
+
+    if last_only:
+        x = x[:, -1:]
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params["embed"], x)
+    return logits, aux, (kvs if collect_kv else None)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token, KV cache)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, run: RunConfig,
+               abstract: bool = False):
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def kv_buf(extra_lead=(), length=max_len):
+        buf = kv_cache.alloc(batch, length, KV, hd, run.kv_cache_dtype,
+                             abstract=abstract)
+
+        def lead(x):
+            if abstract:
+                return jax.ShapeDtypeStruct(extra_lead + x.shape, x.dtype)
+            return jnp.broadcast_to(x, extra_lead + x.shape).copy() \
+                if extra_lead else x
+        return jax.tree_util.tree_map(lead, buf)
+
+    pos = (jax.ShapeDtypeStruct((batch,), jnp.int32) if abstract
+           else jnp.zeros((batch,), jnp.int32))
+    if cfg.cross_attn_every:
+        G = cfg.num_layers // cfg.cross_attn_every
+        n_self = cfg.cross_attn_every - 1
+        return {"pos": pos,
+                "k": kv_buf((G, n_self)), "v": kv_buf((G, n_self)),
+                "cross_k": kv_buf((G,), cfg.num_vision_tokens),
+                "cross_v": kv_buf((G,), cfg.num_vision_tokens)}
+    L = cfg.num_layers
+    return {"pos": pos, "k": kv_buf((L,)), "v": kv_buf((L,))}
+
+
+def prefill(cfg: ModelConfig, params, tokens, max_len: int, run: RunConfig,
+            extras: Optional[dict] = None):
+    """Run the full prompt, build a max_len cache.  Returns (logits, cache)."""
+    B, S = tokens.shape
+    logits, aux, kvs = forward(cfg, params, tokens, run, extras,
+                               collect_kv=True,
+                               last_only=run.prefill_logits == "last")
+    cache = init_cache(cfg, B, max_len, run)
+    pos0 = jnp.zeros((B,), jnp.int32)
+
+    if cfg.cross_attn_every:
+        (self_kvs, cross_kvs) = kvs
+        k_new, v_new = self_kvs                # (G, n_self, B, S, KV, D)
+        ck, cv = cross_kvs                     # (G, B, Tv, KV, D)
+        cache["k"] = _write_stacked(cache["k"], k_new, pos0, lead=2)
+        cache["v"] = _write_stacked(cache["v"], v_new, pos0, lead=2)
+        cache["cross_k"] = _write_stacked(
+            cache["cross_k"], ck, pos0, lead=1, full=True)
+        cache["cross_v"] = _write_stacked(
+            cache["cross_v"], cv, pos0, lead=1, full=True)
+    else:
+        k_new, v_new = kvs                     # (L, B, S, KV, D)
+        cache["k"] = _write_stacked(cache["k"], k_new, pos0, lead=1)
+        cache["v"] = _write_stacked(cache["v"], v_new, pos0, lead=1)
+    cache["pos"] = jnp.full((B,), S, jnp.int32)
+    return logits, cache
+
+
+def _write_stacked(buf, new, pos, lead: int, full: bool = False):
+    """Vectorized kv_cache.write over `lead` leading (layer) axes."""
+    fn = kv_cache.write
+    if full:
+        fn = lambda c, n, p: kv_cache.write(c, n, jnp.zeros_like(p))
+    for _ in range(lead):
+        fn = jax.vmap(fn, in_axes=(0, 0, None))
+    return fn(buf, new, pos)
+
+
+def decode_step(cfg: ModelConfig, params, token, cache, run: RunConfig,
+                extras: Optional[dict] = None):
+    """token: (B, 1) -> (logits (B, 1, V), updated cache)."""
+    B = token.shape[0]
+    pos = cache["pos"]
+    x = embed(params["embed"], token)
+    x = constrain(x, ("batch", None, "embed"))
+
+    if run.decode_inplace_cache:
+        # caches stay in the scan CARRY, written in place -- no per-step
+        # full-cache restacking copy (EXPERIMENTS.md §Perf)
+        if cfg.cross_attn_every:
+            n_self = cfg.cross_attn_every - 1
+            mem_len = jnp.full((B,), cfg.num_vision_tokens, jnp.int32)
+
+            def inner(carry, xs):
+                x, aux, kc, vc, gi = carry
+                lp, si = xs
+                x, a, kc, vc = _block_decode_inplace(
+                    cfg, lp, x, pos, kc, vc, (gi, si), run)
+                return (x, aux + a, kc, vc, gi), None
+
+            def group_body(carry, xs):
+                x, aux, kc, vc = carry
+                gp, ck, cv, gi = xs
+                (x, aux, kc, vc, _), _ = jax.lax.scan(
+                    inner, (x, aux, kc, vc, gi),
+                    (gp["self"], jnp.arange(n_self)))
+                x = _cross_attn_decode(cfg, gp["cross"], x, ck, cv, mem_len)
+                return (x, aux, kc, vc), None
+
+            G = cfg.num_layers // cfg.cross_attn_every
+            (x, aux, kc, vc), _ = jax.lax.scan(
+                group_body, (x, 0.0, cache["k"], cache["v"]),
+                (params["groups"], cache["cross_k"], cache["cross_v"],
+                 jnp.arange(G)))
+        else:
+            def body_ip(carry, xs):
+                x, aux, kc, vc = carry
+                lp, li = xs
+                x, a, kc, vc = _block_decode_inplace(
+                    cfg, lp, x, pos, kc, vc, (li,), run)
+                return (x, aux + a, kc, vc), None
+
+            (x, aux, kc, vc), _ = jax.lax.scan(
+                body_ip, (x, 0.0, cache["k"], cache["v"]),
+                (params["layers"], jnp.arange(cfg.num_layers)))
+        cache = dict(cache, k=kc, v=vc)
+    else:
+        def body(carry, xs):
+            x, aux = carry
+            lp, kc, vc = xs
+            x, a, kc, vc = _block_decode(cfg, lp, x, pos, kc, vc, run)
+            return (x, aux + a), (kc, vc)
+
+        if cfg.cross_attn_every:
+            def group_body(carry, xs):
+                x, aux = carry
+                gp, kc, vc, ck, cv = xs
+                (x, aux), kvs = jax.lax.scan(body, (x, aux),
+                                             (gp["self"], kc, vc))
+                mem_len = jnp.full((B,), cfg.num_vision_tokens, jnp.int32)
+                x = _cross_attn_decode(cfg, gp["cross"], x, ck, cv, mem_len)
+                return (x, aux), kvs
+
+            (x, aux), kvs = jax.lax.scan(
+                group_body, (x, 0.0),
+                (params["groups"], cache["k"], cache["v"],
+                 cache["cross_k"], cache["cross_v"]))
+            cache = dict(cache, k=kvs[0], v=kvs[1])
+        else:
+            (x, aux), kvs = jax.lax.scan(
+                body, (x, 0.0), (params["layers"], cache["k"], cache["v"]))
+            cache = dict(cache, k=kvs[0], v=kvs[1])
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params["embed"], x)
+    cache["pos"] = pos + 1
+    return logits, cache

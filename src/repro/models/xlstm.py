@@ -1,0 +1,216 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, strictly sequential recurrence).
+
+The mLSTM recurrence
+
+    C_t = f_t C_{t-1} + i_t v_t k_t^T ,   n_t = f_t n_{t-1} + i_t k_t
+    y_t = C_t q_t / max(|n_t . q_t|, 1)
+
+is exactly the SSD form (state = matrix memory, per-head scalar decay), so
+train/prefill reuses ``ssm.ssd_chunked`` with per-head B/C; the normalizer
+``n`` rides along as an extra ones-channel of ``v``.  Stabilization
+simplification vs. the paper: the input gate uses exp(clip(i, -8, 8)) and
+the forget gate log-sigmoid (always-stable log-space decay) instead of the
+paper's running max-state m_t; the normalizer bound max(|n.q|, 1) is kept.
+Noted in DESIGN.md §7.
+
+sLSTM: per-head block-diagonal recurrent mixing, stabilized exp gating,
+lax.scan over time (inherently sequential — the paper says the same).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import P
+from repro.models.layers import rmsnorm, apply_norm, norm_schema
+from repro.models.ssm import ssd_chunked
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+def mlstm_dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = cfg.num_heads
+    Dh = d_in // H
+    return d_in, H, Dh
+
+
+def mlstm_schema(cfg):
+    d = cfg.d_model
+    d_in, H, Dh = mlstm_dims(cfg)
+    W = 4
+    return {
+        "up": P((d, 2 * d_in), ("embed", "ssm_inner")),
+        "conv_w": P((W, d_in), (None, None), scale=0.5),
+        "conv_b": P((d_in,), (None,), init="zeros"),
+        "wq": P((d_in, d_in), ("ssm_inner", None)),
+        "wk": P((d_in, d_in), ("ssm_inner", None)),
+        "wv": P((d_in, d_in), ("ssm_inner", None)),
+        "wi": P((d_in, H), ("ssm_inner", None), scale=0.02),
+        "wf": P((d_in, H), ("ssm_inner", None), scale=0.02),
+        "bi": P((H,), (None,), init="zeros"),
+        "bf": P((H,), (None,), init="ones"),   # bias toward remembering
+        "norm": P((d_in,), (None,), init="ones"),
+        "down": P((d_in, d), ("ssm_inner", "embed")),
+    }
+
+
+def _mlstm_qkvif(cfg, p, u, conv_state=None):
+    B, S, _ = u.shape
+    d_in, H, Dh = mlstm_dims(cfg)
+    zx = u @ p["up"]
+    x, z = jnp.split(zx, 2, axis=-1)
+    # causal depthwise conv on the mLSTM input path
+    W = p["conv_w"].shape[0]
+    pad = (jnp.zeros((B, W - 1, d_in), x.dtype) if conv_state is None
+           else conv_state.astype(x.dtype))
+    full = jnp.concatenate([pad, x], axis=1)
+    xc = sum(full[:, i:i + S] * p["conv_w"][i] for i in range(W))
+    xc = jax.nn.silu(xc + p["conv_b"])
+    new_conv = full[:, -(W - 1):]
+
+    q = (xc @ p["wq"]).reshape(B, S, H, Dh)
+    k = (xc @ p["wk"]).reshape(B, S, H, Dh) / (Dh ** 0.5)
+    v = (x @ p["wv"]).reshape(B, S, H, Dh)
+    logf = jax.nn.log_sigmoid((xc @ p["wf"] + p["bf"]).astype(jnp.float32))
+    i_gate = jnp.exp(jnp.clip((xc @ p["wi"] + p["bi"]).astype(jnp.float32),
+                              -8.0, 8.0))
+    return x, z, q, k, v, logf, i_gate, new_conv
+
+
+def mlstm_forward(cfg, p, u, state=None, *, chunk: int = 128):
+    """u: (B, S, d) -> (y, new_state)."""
+    B, S, d = u.shape
+    d_in, H, Dh = mlstm_dims(cfg)
+    conv_in = state["conv"] if state is not None else None
+    x, z, q, k, v, logf, i_gate, new_conv = _mlstm_qkvif(cfg, p, u, conv_in)
+
+    # v extended with a ones channel -> the scan also produces n . q
+    v_ext = jnp.concatenate(
+        [v.astype(jnp.float32) * i_gate[..., None],
+         i_gate[..., None]], axis=-1)                       # (B,S,H,Dh+1)
+    h0 = (state["mem"] if state is not None
+          else jnp.zeros((B, H, Dh + 1, Dh), jnp.float32))
+    y_ext, h_fin = ssd_chunked(v_ext, logf, k, q, h0, chunk=chunk)
+    y, nq = y_ext[..., :Dh], y_ext[..., Dh:]
+    y = y / jnp.maximum(jnp.abs(nq), 1.0)
+    y = y.reshape(B, S, d_in).astype(u.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["down"], {"conv": new_conv, "mem": h_fin}
+
+
+def mlstm_step(cfg, p, u, state):
+    """Single decode step; u: (B, 1, d)."""
+    B, _, d = u.shape
+    d_in, H, Dh = mlstm_dims(cfg)
+    x, z, q, k, v, logf, i_gate, new_conv = _mlstm_qkvif(
+        cfg, p, u, state["conv"])
+    f = jnp.exp(logf[:, 0])                                 # (B,H)
+    iv = v[:, 0].astype(jnp.float32) * i_gate[:, 0][..., None]
+    v_ext = jnp.concatenate([iv, i_gate[:, 0][..., None]], axis=-1)
+    h = (state["mem"] * f[..., None, None]
+         + jnp.einsum("bhp,bhn->bhpn", v_ext,
+                      k[:, 0].astype(jnp.float32)))
+    y_ext = jnp.einsum("bhpn,bhn->bhp", h, q[:, 0].astype(jnp.float32))
+    y, nq = y_ext[..., :Dh], y_ext[..., Dh:]
+    y = (y / jnp.maximum(jnp.abs(nq), 1.0)).reshape(B, 1, d_in)
+    y = rmsnorm(y.astype(u.dtype) * jax.nn.silu(z), p["norm"])
+    return y @ p["down"], {"conv": new_conv, "mem": h}
+
+
+def mlstm_init_state(cfg, batch: int, dtype=jnp.float32):
+    d_in, H, Dh = mlstm_dims(cfg)
+    return {"conv": jnp.zeros((batch, 3, d_in), dtype),
+            "mem": jnp.zeros((batch, H, Dh + 1, Dh), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+def slstm_schema(cfg):
+    d = cfg.d_model
+    H = cfg.num_heads
+    Dh = d // H
+    d_ff = int(round(4 * d / 3 / 64)) * 64 or 64     # paper's 4/3 post-FFN
+    gates = {}
+    for g in ("i", "f", "z", "o"):
+        gates[f"w{g}"] = P((d, d), ("embed", None), scale=0.02)
+        gates[f"r{g}"] = P((H, Dh, Dh), (None, None, None), scale=0.02)
+        gates[f"b{g}"] = P((d,), (None,),
+                           init="ones" if g == "f" else "zeros")
+    return {
+        **gates,
+        "norm": P((d,), (None,), init="ones"),
+        "ffn_up": P((d, d_ff), ("embed", "mlp")),
+        "ffn_gate": P((d, d_ff), ("embed", "mlp")),
+        "ffn_down": P((d_ff, d), ("mlp", "embed")),
+    }
+
+
+def _slstm_cell(cfg, p, xt, carry):
+    """One sLSTM step.  xt: (B, d) pre-activations already include W x.
+    carry = (c, n, h, m) each (B, d) [m per unit for simplicity]."""
+    B, d = xt["i"].shape
+    H = cfg.num_heads
+    Dh = d // H
+    c, n, h, m = carry
+    hh = h.reshape(B, H, Dh)
+
+    def rec(g):
+        return jnp.einsum("bhx,hxy->bhy", hh, p[f"r{g}"]).reshape(B, d)
+
+    it = xt["i"] + rec("i")
+    ft = xt["f"] + rec("f")
+    zt = jnp.tanh(xt["z"] + rec("z"))
+    ot = jax.nn.sigmoid(xt["o"] + rec("o"))
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(logf + m - m_new)
+    c_new = f_p * c + i_p * zt
+    n_new = f_p * n + i_p
+    h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_forward(cfg, p, u, state=None):
+    """u: (B, S, d) -> (y, new_state).  Sequential scan over time."""
+    B, S, d = u.shape
+    pre = {g: (u @ p[f"w{g}"] + p[f"b{g}"]).astype(jnp.float32)
+           for g in ("i", "f", "z", "o")}
+    carry = state["cell"] if state is not None else _slstm_zero(cfg, B)
+
+    def step(cr, t):
+        xt = {g: pre[g][:, t] for g in pre}
+        return _slstm_cell(cfg, p, xt, cr)
+
+    carry, hs = jax.lax.scan(step, carry, jnp.arange(S))
+    y = jnp.moveaxis(hs, 0, 1).astype(u.dtype)               # (B, S, d)
+    y = rmsnorm(y, p["norm"])
+    ff = (y @ p["ffn_up"]) * jax.nn.silu(y @ p["ffn_gate"])
+    return ff @ p["ffn_down"], {"cell": carry}
+
+
+def slstm_step(cfg, p, u, state):
+    B, _, d = u.shape
+    xt = {g: (u[:, 0] @ p[f"w{g}"] + p[f"b{g}"]).astype(jnp.float32)
+          for g in ("i", "f", "z", "o")}
+    carry, h = _slstm_cell(cfg, p, xt, state["cell"])
+    y = rmsnorm(h[:, None].astype(u.dtype), p["norm"])
+    ff = (y @ p["ffn_up"]) * jax.nn.silu(y @ p["ffn_gate"])
+    return ff @ p["ffn_down"], {"cell": carry}
+
+
+def _slstm_zero(cfg, batch):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return (z, z, z, z - 1e30 * 0.0)
+
+
+def slstm_init_state(cfg, batch: int):
+    return {"cell": _slstm_zero(cfg, batch)}

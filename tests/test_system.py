@@ -1,0 +1,98 @@
+"""End-to-end behaviour tests for the paper's system: the full
+generation+transmission pipeline, plan->executor consistency, and the
+dry-run path on the real (single) device."""
+
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import RunConfig, SHAPES, get_config, smoke_variant
+from repro.configs.ddim_cifar10 import SMOKE
+from repro.core.bandwidth import pso_allocate, tau_prime_of
+from repro.core.delay_model import DelayModel
+from repro.core.quality_model import PowerLawFID
+from repro.core.service import make_scenario
+from repro.core.simulator import simulate
+from repro.core.stacking import stacking
+from repro.diffusion import unet
+from repro.diffusion.executor import BatchDenoisingExecutor
+from repro.models import api
+from repro.models.params import init_params
+
+
+def test_full_paper_pipeline_end_to_end():
+    """Scenario -> PSO bandwidth -> STACKING -> execute on the U-Net ->
+    all deadlines met, plan constraints hold, images produced."""
+    delay, quality = DelayModel(), PowerLawFID()
+    scn = make_scenario(K=6, tau_min=4, tau_max=10, seed=3)
+    res = pso_allocate(scn, stacking, delay, quality,
+                       num_particles=6, iters=4)
+    tp = tau_prime_of(scn, res.alloc)
+    plan = stacking(scn.services, tp, delay, quality)
+    plan.validate(gen_deadlines=tp)
+
+    sim = simulate(scn, res.alloc, plan, quality)
+    assert sim.outage_rate == 0.0
+    assert all(o.steps > 0 for o in sim.outcomes)
+
+    params = init_params(unet.schema(SMOKE), jax.random.PRNGKey(0))
+    ex = BatchDenoisingExecutor(SMOKE, params)
+    images, _ = ex.run(plan, jax.random.PRNGKey(1))
+    assert set(images) == {s.id for s in scn.services}
+    assert all(np.isfinite(v).all() for v in images.values())
+
+
+def test_input_specs_cover_all_shapes():
+    """Every (arch x shape) produces well-formed abstract input specs."""
+    run = RunConfig()
+    for arch in ("tinyllama-1.1b", "whisper-tiny", "llama-3.2-vision-90b",
+                 "xlstm-125m", "qwen3-moe-30b-a3b"):
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            specs = api.input_specs(cfg, shape, run, abstract=True)
+            if shape.kind == "decode":
+                assert "cache" in specs and "token" in specs
+                assert specs["token"].shape == (shape.global_batch, 1)
+            else:
+                assert specs["tokens"].shape == (shape.global_batch,
+                                                 shape.seq_len)
+
+
+def test_dryrun_smoke_on_host_mesh():
+    """The dry-run machinery itself (1-device mesh, reduced arch):
+    lower+compile+analyze must succeed in-process."""
+    import repro.launch.hlo_cost as hc
+    cfg = smoke_variant(get_config("tinyllama-1.1b"))
+    run = RunConfig()
+    params_abs = api.abstract_model(cfg)
+    import jax.numpy as jnp
+    step = api.make_decode_step(cfg, run)
+    cache = api.get_model(cfg).init_cache(cfg, 2, 64, run, abstract=True)
+    tok = jax.ShapeDtypeStruct((2, 1), jnp.int32)
+    compiled = jax.jit(step).lower(params_abs, tok, cache).compile()
+    rec = hc.analyze_hlo(compiled.as_text())
+    assert rec["flops"] > 0 and rec["bytes"] > 0
+
+
+def test_dryrun_artifacts_complete_if_present():
+    """If the full sweep has been run, all 80 artifacts must exist and
+    agree on schema."""
+    import glob
+    import json
+    import os
+    art = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                       "dryrun")
+    files = glob.glob(os.path.join(art, "*.json"))
+    if len(files) < 80:
+        pytest.skip("full dry-run sweep not present")
+    single = [f for f in files if f.endswith("_16x16.json")]
+    multi = [f for f in files if f.endswith("_2x16x16.json")]
+    assert len(single) == 40 and len(multi) == 40
+    for f in files:
+        rec = json.load(open(f))
+        assert rec["roofline"]["dominant"] in ("compute_s", "memory_s",
+                                               "collective_s")
+        assert rec["hlo_flops_per_chip"] > 0
