@@ -6,17 +6,16 @@ see DESIGN.md §3).  Also reports the analytic TPU v5e estimate."""
 import jax
 import numpy as np
 
+from repro.api import DiffusionWorkload
 from repro.configs.ddim_cifar10 import SMOKE, CONFIG
 from repro.core.delay_model import fit, tpu_estimate, PAPER_A, PAPER_B
 from repro.diffusion import unet
-from repro.diffusion.executor import BatchDenoisingExecutor
-from repro.models.params import init_params, param_bytes
+from repro.models.params import param_bytes
 
 
 def run(csv_rows):
-    params = init_params(unet.schema(SMOKE), jax.random.PRNGKey(0))
-    ex = BatchDenoisingExecutor(SMOKE, params)
-    curve = ex.measure_delay_curve(jax.random.PRNGKey(1),
+    wl = DiffusionWorkload(cfg=SMOKE, init_seed=0)
+    curve = wl.measure_delay_curve(jax.random.PRNGKey(1),
                                    batch_sizes=[1, 2, 3, 4, 6, 8, 12, 16],
                                    reps=3)
     model = fit([c[0] for c in curve], [c[1] for c in curve])

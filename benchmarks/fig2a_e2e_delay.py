@@ -5,22 +5,17 @@ transmissions finish close to the deadline."""
 
 import numpy as np
 
-from repro.core.bandwidth import pso_allocate, tau_prime_of
-from repro.core.delay_model import DelayModel
-from repro.core.quality_model import PowerLawFID
+from repro.api import Provisioner
 from repro.core.service import make_scenario
-from repro.core.simulator import simulate
-from repro.core.stacking import stacking
 
 
 def run(csv_rows):
-    delay, quality = DelayModel(), PowerLawFID()
     scn = make_scenario(K=10, seed=42)
-    res = pso_allocate(scn, stacking, delay, quality,
-                       num_particles=12, iters=12, seed=0)
-    tp = tau_prime_of(scn, res.alloc)
-    plan = stacking(scn.services, tp, delay, quality)
-    sim = simulate(scn, res.alloc, plan, quality)
+    prov = Provisioner(scn, scheduler="stacking", allocator="pso",
+                       allocator_kwargs=dict(num_particles=12, iters=12,
+                                             seed=0))
+    report = prov.run()
+    plan, sim = report.plan, report.sim
 
     for o in sim.outcomes:
         csv_rows.append((f"fig2a_svc{o.id}_e2e", o.e2e_delay,

@@ -3,17 +3,15 @@
 
 import numpy as np
 
-from repro.core.baselines import (fixed_size_batching, greedy_batching,
-                                  single_instance)
-from repro.core.bandwidth import pso_allocate
+from repro.api import Provisioner, get_scheduler
 from repro.core.delay_model import DelayModel
 from repro.core.quality_model import PowerLawFID
 from repro.core.service import make_scenario
 from repro.core.simulator import run_scheme
-from repro.core.stacking import stacking
 
-SCHEMES = [("stacking", stacking), ("single", single_instance),
-           ("greedy", greedy_batching), ("fixed", fixed_size_batching)]
+# CSV label -> scheduler registry name
+SCHEMES = [("stacking", "stacking"), ("single", "single_instance"),
+           ("greedy", "greedy"), ("fixed", "fixed_size")]
 
 
 def run(csv_rows, ks=(5, 10, 15, 20, 25), seeds=(0, 1, 2)):
@@ -23,10 +21,14 @@ def run(csv_rows, ks=(5, 10, 15, 20, 25), seeds=(0, 1, 2)):
         fids = {name: [] for name, _ in SCHEMES}
         for seed in seeds:
             scn = make_scenario(K=K, seed=seed)
-            res = pso_allocate(scn, stacking, delay, quality,
-                               num_particles=8, iters=6, seed=seed)
+            prov = Provisioner(scn, scheduler="stacking", allocator="pso",
+                               delay=delay, quality=quality,
+                               allocator_kwargs=dict(num_particles=8,
+                                                     iters=6, seed=seed))
+            alloc = prov.allocate()
             for name, sched in SCHEMES:
-                r = run_scheme(scn, sched, delay, quality, res.alloc)
+                r = run_scheme(scn, get_scheduler(sched), delay, quality,
+                               alloc)
                 fids[name].append(r.mean_fid)
         for name, _ in SCHEMES:
             m = float(np.mean(fids[name]))

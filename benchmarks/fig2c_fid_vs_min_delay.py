@@ -4,32 +4,34 @@ should grow as deadlines tighten."""
 
 import numpy as np
 
-from repro.core.baselines import (fixed_size_batching, greedy_batching,
-                                  single_instance)
-from repro.core.bandwidth import equal_allocate, pso_allocate
+from repro.api import Provisioner, get_allocator, get_scheduler
 from repro.core.delay_model import DelayModel
 from repro.core.quality_model import PowerLawFID
 from repro.core.service import make_scenario
 from repro.core.simulator import run_scheme
-from repro.core.stacking import stacking
 
 
 def run(csv_rows, tau_mins=(3.0, 5.0, 7.0, 9.0, 11.0), seeds=(0, 1)):
     delay, quality = DelayModel(), PowerLawFID()
+    stacking = get_scheduler("stacking")
     gains = []
     for tmin in tau_mins:
         vals = {}
         for seed in seeds:
             scn = make_scenario(K=20, tau_min=tmin, tau_max=20.0,
                                 seed=seed)
-            res = pso_allocate(scn, stacking, delay, quality,
-                               num_particles=8, iters=6, seed=seed)
+            prov = Provisioner(scn, scheduler="stacking", allocator="pso",
+                               delay=delay, quality=quality,
+                               allocator_kwargs=dict(num_particles=8,
+                                                     iters=6, seed=seed))
+            pso_alloc = prov.allocate()
+            eq_alloc = get_allocator("equal")(scn)
             for name, sched, alloc in [
-                ("stacking", stacking, res.alloc),
-                ("equal_bw", stacking, equal_allocate(scn)),
-                ("greedy", greedy_batching, res.alloc),
-                ("fixed", fixed_size_batching, res.alloc),
-                ("single", single_instance, res.alloc),
+                ("stacking", stacking, pso_alloc),
+                ("equal_bw", stacking, eq_alloc),
+                ("greedy", get_scheduler("greedy"), pso_alloc),
+                ("fixed", get_scheduler("fixed_size"), pso_alloc),
+                ("single", get_scheduler("single_instance"), pso_alloc),
             ]:
                 r = run_scheme(scn, sched, delay, quality, alloc)
                 vals.setdefault(name, []).append(r.mean_fid)

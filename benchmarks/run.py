@@ -13,7 +13,28 @@ from benchmarks import (ablations, beyond_paper, fig1a_delay_vs_batch,
                         fig2b_fid_vs_services, fig2c_fid_vs_min_delay,
                         kernels_bench, roofline_report)
 
+
+def api_suite(rows):
+    """Registry census + analytic one-call pipeline smoke (docs/API.md)."""
+    from repro.api import (Provisioner, list_allocators, list_schedulers,
+                           list_workloads)
+    from repro.core.service import make_scenario
+    rows.append(("api_schedulers", float(len(list_schedulers())),
+                 "|".join(list_schedulers())))
+    rows.append(("api_allocators", float(len(list_allocators())),
+                 "|".join(list_allocators())))
+    rows.append(("api_workloads", float(len(list_workloads())),
+                 "|".join(list_workloads())))
+    t0 = time.time()
+    report = Provisioner(make_scenario(K=8, seed=0), scheduler="stacking",
+                         allocator="coordinate").run()
+    rows.append(("api_provisioner_run_s", time.time() - t0,
+                 f"mean_fid={report.mean_fid:.2f},"
+                 f"batches={report.plan.num_batches}"))
+
+
 SUITES = {
+    "api": api_suite,
     "fig1a": fig1a_delay_vs_batch.run,
     "fig1b": fig1b_fid_vs_steps.run,
     "fig2a": fig2a_e2e_delay.run,

@@ -1,39 +1,32 @@
-"""Quickstart: the paper's full pipeline on one page.
+"""Quickstart: the paper's full pipeline on one page, via the unified
+provisioner API (docs/API.md).
 
 1. Calibrate the delay model g(X) = aX + b on this machine (Fig. 1a).
 2. Build a K-service scenario with heterogeneous deadlines (Sec. IV).
-3. Allocate bandwidth (PSO, Sec. III-C) and schedule batch denoising
-   with STACKING (Alg. 1).
-4. Execute the plan on a real DDIM U-Net with mixed-step batches.
-5. Compare against the paper's three baselines.
+3-4. One `Provisioner.run` call: allocate bandwidth (PSO, Sec. III-C),
+   schedule batch denoising with STACKING (Alg. 1), validate the plan,
+   and execute it on a real DDIM U-Net with mixed-step batches.
+5. Compare against the paper's baselines by registry name.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import jax
 
+from repro.api import DiffusionWorkload, Provisioner, get_scheduler
 from repro.configs.ddim_cifar10 import SMOKE
-from repro.core.baselines import (fixed_size_batching, greedy_batching,
-                                  single_instance)
-from repro.core.bandwidth import pso_allocate, tau_prime_of
-from repro.core.delay_model import DelayModel, fit
+from repro.core.delay_model import DelayModel
 from repro.core.quality_model import PowerLawFID
 from repro.core.service import make_scenario
-from repro.core.simulator import run_scheme, simulate
-from repro.core.stacking import stacking
-from repro.diffusion import unet
-from repro.diffusion.executor import BatchDenoisingExecutor
-from repro.models.params import init_params
+from repro.core.simulator import run_scheme
 
 
 def main():
     key = jax.random.PRNGKey(0)
 
     # 1. calibrate g(X) = aX + b on this hardware --------------------------
-    params = init_params(unet.schema(SMOKE), key)
-    executor = BatchDenoisingExecutor(SMOKE, params)
-    curve = executor.measure_delay_curve(key, batch_sizes=[1, 2, 4, 8])
-    measured = fit([c[0] for c in curve], [c[1] for c in curve])
+    workload = DiffusionWorkload(cfg=SMOKE, init_seed=0)
+    measured = workload.calibrate(key, batch_sizes=(1, 2, 4, 8))
     print(f"measured delay model: a={measured.a * 1e3:.2f} ms/sample, "
           f"b={measured.b * 1e3:.2f} ms")
     # paper constants (RTX-3050) for the simulation below:
@@ -45,31 +38,26 @@ def main():
     print(f"\n{scn.K} services, deadlines "
           f"{[round(s.deadline, 1) for s in scn.services]}")
 
-    # 3. bandwidth + batch plan ---------------------------------------------
-    res = pso_allocate(scn, stacking, delay, quality,
-                       num_particles=10, iters=8)
-    tp = tau_prime_of(scn, res.alloc)
-    plan = stacking(scn.services, tp, delay, quality)
-    plan.validate(gen_deadlines=tp)
+    # 3+4. bandwidth + batch plan + execution on the real U-Net, one call ---
+    prov = Provisioner(scn, workload=workload, scheduler="stacking",
+                       allocator="pso", delay=delay, quality=quality,
+                       allocator_kwargs=dict(num_particles=10, iters=8))
+    report = prov.run(jax.random.PRNGKey(7))       # validates the plan too
+    plan = report.plan
     print(f"STACKING plan: {plan.num_batches} batches, "
           f"sizes {plan.batch_sizes()[:12]}...")
     print(f"steps per service: {dict(sorted(plan.steps_completed.items()))}")
+    print(f"generated {len(report.content)} images, shape "
+          f"{next(iter(report.content.values())).shape}")
+    print("\n" + report.sim.summary())
 
-    # 4. execute on the real U-Net -----------------------------------------
-    images, _ = executor.run(plan, jax.random.PRNGKey(7))
-    print(f"generated {len(images)} images, shape "
-          f"{next(iter(images.values())).shape}")
-    sim = simulate(scn, res.alloc, plan, quality)
-    print("\n" + sim.summary())
-
-    # 5. baselines ------------------------------------------------------------
+    # 5. baselines, by registry name ----------------------------------------
     print("\nscheme comparison (mean FID, lower is better):")
-    for name, sched in [("stacking", stacking),
-                        ("greedy", greedy_batching),
-                        ("fixed", fixed_size_batching),
-                        ("single", single_instance)]:
-        r = run_scheme(scn, sched, delay, quality, res.alloc)
-        print(f"  {name:10s} {r.mean_fid:8.2f}  (outage {r.outage_rate:.0%})")
+    for name in ("stacking", "greedy", "fixed_size", "single_instance"):
+        r = run_scheme(scn, get_scheduler(name), delay, quality,
+                       report.allocation)
+        print(f"  {name:16s} {r.mean_fid:8.2f}  "
+              f"(outage {r.outage_rate:.0%})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,30 @@
+"""Unified provisioner API (see docs/API.md).
+
+Public surface: three protocols (Workload / Scheduler / Allocator), a
+string-keyed registry per protocol, and the ``Provisioner`` facade whose
+``run`` is the one-call end-to-end pipeline.
+"""
+
+from repro.api.protocols import (Allocator, Scheduler, Workload,
+                                 WorkloadOutput)
+from repro.api.registry import (ALLOCATORS, SCHEDULERS, WORKLOADS,
+                                get_allocator, get_scheduler, get_workload,
+                                list_allocators, list_schedulers,
+                                list_workloads, register_allocator,
+                                register_scheduler, register_workload)
+# entry modules populate the registries on import
+from repro.api import allocators as _allocators   # noqa: F401
+from repro.api import schedulers as _schedulers   # noqa: F401
+from repro.api import workloads as _workloads     # noqa: F401
+from repro.api.workloads import DecodeWorkload, DiffusionWorkload
+from repro.api.provisioner import Provisioner, ProvisionReport
+
+__all__ = [
+    "Allocator", "Scheduler", "Workload", "WorkloadOutput",
+    "ALLOCATORS", "SCHEDULERS", "WORKLOADS",
+    "register_allocator", "register_scheduler", "register_workload",
+    "get_allocator", "get_scheduler", "get_workload",
+    "list_allocators", "list_schedulers", "list_workloads",
+    "DecodeWorkload", "DiffusionWorkload",
+    "Provisioner", "ProvisionReport",
+]

@@ -1,0 +1,51 @@
+"""Allocator registry entries: uniform adapters over the P1 solvers in
+``repro.core.bandwidth``.
+
+Every entry has the ``Allocator`` signature
+``(scenario, scheduler, delay, quality, **kwargs) -> np.ndarray``;
+the closed-form splits simply ignore the scheduler/models, and the
+search-based ones pass ``**kwargs`` through (``num_particles``,
+``iters``, ``seed``, ...), so registry users keep full control of the
+underlying solvers.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.api.registry import register_allocator
+from repro.core.bandwidth import (coordinate_refine, equal_allocate,
+                                  inv_se_allocate, pso_allocate)
+from repro.core.delay_model import DelayModel
+from repro.core.quality_model import QualityModel
+from repro.core.service import Scenario
+
+
+@register_allocator("equal")
+def equal(scn: Scenario, scheduler=None, delay: DelayModel = None,
+          quality: QualityModel = None, **_) -> np.ndarray:
+    return equal_allocate(scn)
+
+
+@register_allocator("inv_se")
+def inv_se(scn: Scenario, scheduler=None, delay: DelayModel = None,
+           quality: QualityModel = None, **_) -> np.ndarray:
+    return inv_se_allocate(scn)
+
+
+@register_allocator("pso")
+def pso(scn: Scenario, scheduler, delay: DelayModel,
+        quality: QualityModel, **kw) -> np.ndarray:
+    return pso_allocate(scn, scheduler, delay, quality, **kw).alloc
+
+
+@register_allocator("coordinate")
+def coordinate(scn: Scenario, scheduler, delay: DelayModel,
+               quality: QualityModel, *, init: str = "inv_se",
+               **kw) -> np.ndarray:
+    """Deterministic hill-climb refinement of a closed-form split
+    (``init``: any registered allocator name, default ``inv_se``)."""
+    from repro.api.registry import get_allocator
+    start = get_allocator(init)(scn, scheduler, delay, quality)
+    return coordinate_refine(scn, start, scheduler, delay, quality,
+                             **kw).alloc

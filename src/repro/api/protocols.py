@@ -1,0 +1,77 @@
+"""The provisioner API's three protocols.
+
+The paper's pipeline is a three-stage composition
+
+    Allocator (P1)  ->  Scheduler (P2)  ->  Workload (execution)
+
+and these protocols pin down the one calling convention per stage that
+every implementation — paper method, baseline, or beyond-paper variant —
+must share.  Anything satisfying them can be dropped into a
+``Provisioner`` (and registered by name, see ``repro.api.registry``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import (Any, Dict, List, Optional, Protocol, Sequence, Tuple,
+                    runtime_checkable)
+
+import numpy as np
+
+from repro.core.delay_model import DelayModel
+from repro.core.plan import BatchPlan
+from repro.core.quality_model import QualityModel
+from repro.core.service import Scenario, ServiceRequest
+
+
+@runtime_checkable
+class Scheduler(Protocol):
+    """P2 solver: generation budgets -> batch-denoising plan."""
+
+    def __call__(self, services: Sequence[ServiceRequest],
+                 tau_prime: Dict[int, float], delay: DelayModel,
+                 quality: QualityModel) -> BatchPlan: ...
+
+
+@runtime_checkable
+class Allocator(Protocol):
+    """P1 solver: scenario (+ inner scheduler for fitness) -> bandwidth
+    allocation, one entry per service, summing to the scenario budget."""
+
+    def __call__(self, scenario: Scenario, scheduler: Scheduler,
+                 delay: DelayModel, quality: QualityModel,
+                 **kwargs) -> np.ndarray: ...
+
+
+@dataclasses.dataclass
+class WorkloadOutput:
+    """What executing a plan produced.
+
+    content: per-service generated artifact (image array, token list, ...)
+    timings: per-batch ``(batch_size, seconds)`` measurements (empty unless
+             the workload was asked to time itself) — the raw material for
+             refitting the affine DelayModel g(X) = aX + b.
+    """
+    content: Dict[int, Any]
+    timings: List[Tuple[int, float]] = dataclasses.field(
+        default_factory=list)
+
+
+@runtime_checkable
+class Workload(Protocol):
+    """A generative step executor: owns the model that turns a BatchPlan
+    into content, plus the hardware-calibration hooks (Fig. 1a) and the
+    quality model (Fig. 1b) that parameterize the optimization for it."""
+
+    name: str
+
+    def default_delay(self) -> DelayModel: ...
+
+    def default_quality(self) -> QualityModel: ...
+
+    def calibrate(self, key: Optional[Any] = None, *,
+                  batch_sizes: Sequence[int] = (1, 2, 4, 8),
+                  reps: int = 2) -> DelayModel: ...
+
+    def execute(self, plan: BatchPlan, key: Optional[Any] = None,
+                *, timed: bool = False) -> WorkloadOutput: ...

@@ -1,0 +1,166 @@
+"""The one-call end-to-end pipeline.
+
+    from repro.api import Provisioner
+    report = Provisioner(scenario, workload="diffusion",
+                         scheduler="stacking", allocator="pso").run(key)
+
+runs P1 (bandwidth allocation) -> P2 (batch-denoising plan) -> execution
+on the workload's real model, and bundles everything a figure script or
+serving loop needs into a ``ProvisionReport``.  Components are registry
+names or protocol instances; omitting the workload gives the pure
+analytic pipeline (allocation + plan + simulated timeline, no model).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.api.protocols import WorkloadOutput
+from repro.api.registry import ALLOCATORS, SCHEDULERS, WORKLOADS
+# importing the entry modules populates the registries
+from repro.api import allocators as _allocators   # noqa: F401
+from repro.api import schedulers as _schedulers   # noqa: F401
+from repro.api import workloads as _workloads     # noqa: F401
+from repro.core.bandwidth import make_plan
+from repro.core.delay_model import DelayModel, fit
+from repro.core.plan import BatchPlan
+from repro.core.quality_model import PowerLawFID, QualityModel
+from repro.core.service import Scenario
+from repro.core.simulator import SimResult, simulate
+
+
+@dataclasses.dataclass
+class ProvisionReport:
+    """Everything one provisioning round produced."""
+    scenario: Scenario
+    allocation: np.ndarray                    # B_k (Hz), sums to budget
+    tau_prime: Dict[int, float]               # generation budgets
+    plan: BatchPlan                           # P2 solution
+    sim: SimResult                            # analytic timeline + quality
+    content: Optional[Dict[int, Any]] = None  # per-service artifacts
+    timings: List[Tuple[int, float]] = dataclasses.field(
+        default_factory=list)                 # measured (batch_size, s)
+    delay: Optional[DelayModel] = None
+    quality: Optional[QualityModel] = None
+    scheduler_name: str = ""
+    allocator_name: str = ""
+    workload_name: str = ""
+
+    @property
+    def mean_fid(self) -> float:
+        return self.sim.mean_fid
+
+    def refit_delay(self) -> DelayModel:
+        """Fit g(X) = aX + b from this run's measured per-batch timings
+        (requires a timed execution with >= 2 distinct batch sizes) —
+        the calibrate->replan loop's measurement half."""
+        sizes = [x for x, _ in self.timings]
+        if len(set(sizes)) < 2:
+            raise ValueError(
+                "need timed batches of >= 2 distinct sizes to refit; "
+                "run with timed=True on a plan with varied batch sizes")
+        m = fit(sizes, [s for _, s in self.timings])
+        # least squares can extrapolate a (slightly) negative slope or
+        # intercept from noisy timings; delays are physically nonnegative
+        # and the schedulers require g(X) > 0
+        return DelayModel(a=max(m.a, 0.0), b=max(m.b, 1e-6))
+
+    def summary(self) -> str:
+        head = (f"[{self.workload_name or 'analytic'}] "
+                f"scheduler={self.scheduler_name} "
+                f"allocator={self.allocator_name} "
+                f"batches={self.plan.num_batches}")
+        return head + "\n" + self.sim.summary()
+
+
+class Provisioner:
+    """Facade binding a scenario to one (workload, scheduler, allocator)
+    choice.  ``scheduler``/``allocator``/``workload`` accept registry
+    names or protocol instances; ``allocator_kwargs`` pass through to the
+    underlying P1 solver (``num_particles``, ``iters``, ``seed``, ...)."""
+
+    def __init__(self, scenario: Scenario, workload=None,
+                 scheduler="stacking", allocator="pso",
+                 delay: Optional[DelayModel] = None,
+                 quality: Optional[QualityModel] = None,
+                 allocator_kwargs: Optional[dict] = None):
+        self.scenario = scenario
+        self.scheduler_name = scheduler if isinstance(scheduler, str) else \
+            getattr(scheduler, "__name__", type(scheduler).__name__)
+        self.allocator_name = allocator if isinstance(allocator, str) else \
+            getattr(allocator, "__name__", type(allocator).__name__)
+        self.scheduler = SCHEDULERS.resolve(scheduler)
+        self.allocator = ALLOCATORS.resolve(allocator)
+        wl = WORKLOADS.resolve(workload) if workload is not None else None
+        if isinstance(wl, type):
+            wl = wl()
+        self.workload = wl
+        self.workload_name = getattr(wl, "name", "") if wl else ""
+        self.delay = delay if delay is not None else (
+            wl.default_delay() if wl else DelayModel())
+        self.quality = quality if quality is not None else (
+            wl.default_quality() if wl else PowerLawFID())
+        self.allocator_kwargs = dict(allocator_kwargs or {})
+
+    # -- pipeline stages ------------------------------------------------
+    def allocate(self) -> np.ndarray:
+        """P1: bandwidth allocation under the current delay/quality."""
+        return np.asarray(self.allocator(
+            self.scenario, self.scheduler, self.delay, self.quality,
+            **self.allocator_kwargs))
+
+    def plan(self, alloc: np.ndarray) -> Tuple[Dict[int, float], BatchPlan]:
+        """P2: generation budgets + batch plan under an allocation."""
+        return make_plan(self.scenario, alloc, self.scheduler, self.delay,
+                         self.quality)
+
+    def calibrate(self, key=None, **kw) -> DelayModel:
+        """Measure the workload's real g(X) and adopt it for planning."""
+        if self.workload is None:
+            raise ValueError("no workload to calibrate against")
+        self.delay = self.workload.calibrate(key, **kw)
+        return self.delay
+
+    # -- one-call end-to-end --------------------------------------------
+    def run(self, key=None, *, execute: bool = True, timed: bool = False,
+            calibrate: bool = False, refit: bool = False,
+            validate: bool = True) -> ProvisionReport:
+        """Allocate -> plan -> (validate) -> simulate -> execute.
+
+        calibrate: measure the workload's delay curve first and plan with
+            the fitted model (Fig.-1a loop).
+        timed: record per-batch wall clock during execution.
+        refit: refit ``self.delay`` in place from the measured timings so
+            the *next* ``run`` replans with them (the calibrate->replan
+            loop's update half); implies ``timed=True`` and requires an
+            executing workload.
+        """
+        if refit:
+            if not execute or self.workload is None:
+                raise ValueError(
+                    "refit=True needs measured timings: attach a workload "
+                    "and keep execute=True")
+            timed = True                   # refit is meaningless untimed
+        if calibrate:
+            self.calibrate(key)
+        alloc = self.allocate()
+        tp, plan = self.plan(alloc)
+        if validate:
+            plan.validate(gen_deadlines=tp)
+        sim = simulate(self.scenario, alloc, plan, self.quality)
+        out = WorkloadOutput(content=None)
+        if execute and self.workload is not None:
+            out = self.workload.execute(plan, key, timed=timed)
+        report = ProvisionReport(
+            scenario=self.scenario, allocation=alloc, tau_prime=tp,
+            plan=plan, sim=sim, content=out.content, timings=out.timings,
+            delay=self.delay, quality=self.quality,
+            scheduler_name=self.scheduler_name,
+            allocator_name=self.allocator_name,
+            workload_name=self.workload_name)
+        if refit:
+            self.delay = report.refit_delay()
+        return report

@@ -1,0 +1,93 @@
+"""String-keyed registries behind the provisioner API.
+
+Three registries — schedulers (P2 solvers), allocators (P1 solvers) and
+workloads (step executors) — so every pipeline component is addressable
+by name (``Provisioner(scn, scheduler="stacking", allocator="pso")``)
+and new variants plug in with a one-line decorator:
+
+    @register_scheduler("my_sched")
+    def my_sched(services, tau_prime, delay, quality): ...
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Sequence
+
+
+class Registry:
+    """Name -> object map with decorator registration and helpful errors."""
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._items: Dict[str, Any] = {}
+
+    def register(self, name: str, obj: Any = None,
+                 *, aliases: Sequence[str] = ()) -> Any:
+        """Register ``obj`` (or decorate) under ``name`` and any aliases."""
+        def deco(o):
+            for n in (name, *aliases):
+                if n in self._items:
+                    raise ValueError(
+                        f"{self.kind} '{n}' is already registered")
+                self._items[n] = o
+            return o
+        return deco(obj) if obj is not None else deco
+
+    def get(self, name: str) -> Any:
+        try:
+            return self._items[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown {self.kind} '{name}'; registered: "
+                f"{', '.join(sorted(self._items)) or '(none)'}") from None
+
+    def resolve(self, spec: Any) -> Any:
+        """Look up a string; pass anything else (callable/instance) through."""
+        return self.get(spec) if isinstance(spec, str) else spec
+
+    def names(self) -> List[str]:
+        return sorted(self._items)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._items
+
+
+SCHEDULERS = Registry("scheduler")
+ALLOCATORS = Registry("allocator")
+WORKLOADS = Registry("workload")
+
+
+def register_scheduler(name: str, obj: Any = None, **kw):
+    return SCHEDULERS.register(name, obj, **kw)
+
+
+def register_allocator(name: str, obj: Any = None, **kw):
+    return ALLOCATORS.register(name, obj, **kw)
+
+
+def register_workload(name: str, obj: Any = None, **kw):
+    return WORKLOADS.register(name, obj, **kw)
+
+
+def get_scheduler(name: str) -> Callable:
+    return SCHEDULERS.get(name)
+
+
+def get_allocator(name: str) -> Callable:
+    return ALLOCATORS.get(name)
+
+
+def get_workload(name: str) -> Any:
+    return WORKLOADS.get(name)
+
+
+def list_schedulers() -> List[str]:
+    return SCHEDULERS.names()
+
+
+def list_allocators() -> List[str]:
+    return ALLOCATORS.names()
+
+
+def list_workloads() -> List[str]:
+    return WORKLOADS.names()

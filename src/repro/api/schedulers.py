@@ -1,0 +1,76 @@
+"""Scheduler registry entries: the paper's Algorithm 1, its Sec.-IV
+baselines, the balanced ``equal_steps`` baseline, and the exact
+``optimal`` search for tiny instances.
+
+All share the uniform ``Scheduler`` signature
+``(services, tau_prime, delay, quality) -> BatchPlan``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+from repro.api.registry import register_scheduler
+from repro.core.baselines import (fixed_size_batching, greedy_batching,
+                                  single_instance)
+from repro.core.delay_model import DelayModel
+from repro.core.optimal import optimal_plan
+from repro.core.plan import BatchPlan
+from repro.core.quality_model import QualityModel
+from repro.core.service import ServiceRequest
+from repro.core.stacking import stacking
+
+register_scheduler("stacking", stacking)
+register_scheduler("greedy", greedy_batching)
+register_scheduler("fixed_size", fixed_size_batching, aliases=("fixed",))
+register_scheduler("single_instance", single_instance, aliases=("single",))
+register_scheduler("optimal", optimal_plan)
+
+
+@register_scheduler("equal_steps")
+def equal_steps(services: Sequence[ServiceRequest],
+                tau_prime: Dict[int, float], delay: DelayModel,
+                quality: QualityModel) -> BatchPlan:
+    """Balanced baseline: every service targets the *same* step count T*,
+    batched together each step; T* searched like Algorithm 1's outer loop.
+    Isolates the paper's insight (ii) — balanced step counts — from its
+    clustering/packing machinery."""
+    ids = [s.id for s in services]
+    feasible = [k for k in ids if delay.max_steps(tau_prime[k]) > 0]
+    t_max = max([delay.max_steps(tau_prime[k]) for k in feasible],
+                default=1)
+
+    best_plan, best_q = None, float("inf")
+    for t_star in range(1, max(1, t_max) + 1):
+        taup = {k: float(tau_prime[k]) for k in ids}
+        Tc = {k: 0 for k in ids}
+        active = [k for k in ids if taup[k] >= delay.min_task_delay()]
+        batches, starts, t = [], [], 0.0
+        while active:
+            # drop members that cannot afford the current shared batch
+            while active:
+                g = delay.g(len(active))
+                drop = [k for k in active if taup[k] + 1e-12 < g]
+                if not drop:
+                    break
+                for k in drop:
+                    active.remove(k)
+            if not active:
+                break
+            g = delay.g(len(active))
+            batches.append([(k, Tc[k]) for k in active])
+            starts.append(t)
+            t += g
+            for k in active:
+                taup[k] -= g
+                Tc[k] += 1
+            active = [k for k in active
+                      if Tc[k] < t_star
+                      and taup[k] + 1e-12 >= delay.min_task_delay()]
+        q = quality.mean_fid([Tc[k] for k in ids])
+        if q < best_q - 1e-12:
+            best_plan, best_q = BatchPlan(
+                batches=batches, start_times=starts, steps_completed=Tc,
+                delay=delay), q
+    assert best_plan is not None
+    return best_plan

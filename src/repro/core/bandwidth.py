@@ -37,11 +37,22 @@ def tau_prime_of(scn: Scenario, alloc: np.ndarray) -> Dict[int, float]:
     }
 
 
+def make_plan(scn: Scenario, alloc: np.ndarray, scheduler: SchedulerFn,
+              delay: DelayModel, quality: QualityModel):
+    """Shared P1->P2 composition: generation budgets under an allocation,
+    then the scheduler's batch plan.  Both ``evaluate`` (PSO fitness) and
+    ``simulator.run_scheme`` route through here.
+
+    Returns ``(tau_prime, plan)``.
+    """
+    tp = tau_prime_of(scn, alloc)
+    return tp, scheduler(scn.services, tp, delay, quality)
+
+
 def evaluate(scn: Scenario, alloc: np.ndarray, scheduler: SchedulerFn,
              delay: DelayModel, quality: QualityModel) -> float:
     """Mean FID achieved under a bandwidth allocation (lower = better)."""
-    tp = tau_prime_of(scn, alloc)
-    plan = scheduler(scn.services, tp, delay, quality)
+    _, plan = make_plan(scn, alloc, scheduler, delay, quality)
     return quality.mean_fid(
         [plan.steps_completed[s.id] for s in scn.services])
 

@@ -2,13 +2,19 @@
 exhaustive search over batch-size sequences to measure STACKING's
 optimality gap on problem (P2).
 
-State: sorted vector of remaining generation budgets; at each decision
-point the server picks how many of the tightest-budget active services to
-batch next (services with the smallest remaining budget are always the
-ones at risk — batching any other subset of the same size is dominated,
-because step counts enter quality symmetrically and budgets only shrink).
-Memoized over (rounded budgets, step counts); exponential worst case, only
-used with K <= 6 and coarse budgets in tests/benchmarks.
+Because the delay model is affine (g(X) = aX + b), the elapsed time of
+any schedule prefix is *exactly* a*S + b*N where S = tasks scheduled so
+far and N = batches so far — both integers.  The DP therefore needs no
+time discretization: feasibility checks are exact, and the same
+memoized recursion backs both ``optimal_mean_fid`` (the scalar bound)
+and ``optimal_plan`` (the registry's ``"optimal"`` scheduler, which
+reconstructs an executable ``BatchPlan`` from the DP's decisions).
+
+At each decision point the server batches the m tightest-budget active
+services (batching any other subset of the same size is dominated,
+because step counts enter quality symmetrically and budgets only
+shrink).  Memoized over (batch count, sorted (deadline, steps) pairs);
+exponential worst case, only used with small K in tests/benchmarks.
 """
 
 from __future__ import annotations
@@ -17,51 +23,94 @@ import functools
 from typing import Dict, Sequence, Tuple
 
 from repro.core.delay_model import DelayModel
+from repro.core.plan import BatchPlan
 from repro.core.quality_model import QualityModel
+
+# affordability slack, matching the schedulers' float convention
+# (see stacking.py: ``taup[k] + 1e-12 < g`` means "cannot afford")
+_EPS = 1e-12
+
+
+def _make_dp(delay: DelayModel, quality: QualityModel):
+    """Exact memoized DP.  ``best(n_batches, state)`` returns
+    (minimum total FID reachable, best next batch size m; m=0 = stop),
+    where state is a sorted tuple of (tau_prime, steps_done) pairs."""
+    a, b = delay.a, delay.b
+    g1 = delay.min_task_delay()
+    assert g1 > 0, "degenerate delay model: g(1) must be positive"
+
+    @functools.lru_cache(maxsize=2_000_000)
+    def best(n_batches: int,
+             state: Tuple[Tuple[float, int], ...]) -> Tuple[float, int]:
+        elapsed = a * sum(s for _, s in state) + b * n_batches
+        stop_v = sum(quality.fid(s) for _, s in state)
+        # active = can still afford a dedicated batch; budgets shrink with
+        # the common elapsed time, so "tightest" = smallest tau_prime
+        active = sorted((t, s) for t, s in state
+                        if t - elapsed + _EPS >= g1)
+        if not active:
+            return stop_v, 0
+        inactive = [x for x in state if x[0] - elapsed + _EPS < g1]
+        best_v, best_m = stop_v, 0
+        for m in range(1, len(active) + 1):
+            if active[0][0] - elapsed + _EPS < delay.g(m):
+                break          # the tightest member cannot afford this
+                               # batch; larger batches only cost more
+            nxt = [(t, s + 1 if i < m else s)
+                   for i, (t, s) in enumerate(active)]
+            v, _ = best(n_batches + 1, tuple(sorted(nxt + inactive)))
+            if v < best_v - _EPS:
+                best_v, best_m = v, m
+        return best_v, best_m
+
+    return best
 
 
 def optimal_mean_fid(tau_prime: Sequence[float], delay: DelayModel,
                      quality: QualityModel, max_steps: int = 60,
                      grid: float = 1e-3) -> float:
-    """Exact minimum mean FID over all batch schedules (small K only)."""
+    """Exact minimum mean FID over all batch schedules (small K only).
+
+    ``max_steps``/``grid`` are retained for call-site compatibility but
+    unused: the affine delay model makes the DP exact without either.
+    """
     K = len(tau_prime)
+    best = _make_dp(delay, quality)
+    v, _ = best(0, tuple(sorted((float(t), 0) for t in tau_prime)))
+    return v / K
+
+
+def optimal_plan(services, tau_prime: Dict[int, float], delay: DelayModel,
+                 quality: QualityModel, *,
+                 max_services: int = 8) -> BatchPlan:
+    """Exact-search *scheduler*: reconstructs an executable ``BatchPlan``
+    from the DP's decisions.  Its mean FID equals ``optimal_mean_fid``
+    and the plan passes ``BatchPlan.validate(gen_deadlines=tau_prime)``.
+    Exponential worst case — refuses K > ``max_services``.
+    """
+    ids = [s.id for s in services]
+    K = len(ids)
+    assert K <= max_services, \
+        f"optimal_plan is exact search; K={K} > {max_services}"
+    best = _make_dp(delay, quality)
     g1 = delay.min_task_delay()
+    a, b = delay.a, delay.b
 
-    @functools.lru_cache(maxsize=1_000_000)
-    def best(state: Tuple[Tuple[int, int], ...]) -> float:
-        # state: sorted tuple of (budget_ticks, steps_done)
-        active = [(b, s) for b, s in state if b * grid >= g1]
-        if not active:
-            return sum(quality.fid(s) for _, s in state)
-        # choose a batch = the m tightest active services, m = 1..len
-        active_sorted = sorted(active)
-        inactive = [x for x in state if x[0] * grid < g1]
-        best_v = float("inf")
-        for m in range(1, len(active_sorted) + 1):
-            g = delay.g(m)
-            ticks = int(round(g / grid))
-            # all active budgets shrink; the m tightest gain one step
-            nxt = []
-            for i, (b, s) in enumerate(active_sorted):
-                nb = b - ticks
-                ns = s + 1 if i < m else s
-                if nb * grid < g1 and i < m and b * grid < g:
-                    # cannot afford the batch it was packed into -> it
-                    # wouldn't be packed; skip this m entirely
-                    break
-                nxt.append((max(nb, 0), ns))
-            else:
-                v = best(tuple(sorted(nxt + inactive)))
-                if v < best_v:
-                    best_v = v
-                continue
-            # infeasible m (a packed service couldn't afford the batch)
-        # also allowed: stop now
-        stop_v = sum(quality.fid(s) for _, s in state)
-        best_v = min(best_v, stop_v)
-        return best_v
-
-    state = tuple(sorted(
-        (int(t / grid), 0) for t in tau_prime))
-    # cap steps via budget: irrelevant for small instances
-    return best(state) / K
+    Tc = {k: 0 for k in ids}
+    batches, starts = [], []
+    n_batches = 0
+    while True:
+        elapsed = a * sum(Tc.values()) + b * n_batches
+        pairs = sorted((float(tau_prime[k]), Tc[k], k) for k in ids)
+        _, m = best(n_batches, tuple((t, s) for t, s, _ in pairs))
+        if m == 0:
+            break
+        members = [k for t, _, k in pairs
+                   if t - elapsed + _EPS >= g1][:m]
+        batches.append([(k, Tc[k]) for k in members])
+        starts.append(elapsed)
+        for k in members:
+            Tc[k] += 1
+        n_batches += 1
+    return BatchPlan(batches=batches, start_times=starts,
+                     steps_completed=Tc, delay=delay)

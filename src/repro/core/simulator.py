@@ -9,7 +9,7 @@ from typing import Dict, List, Sequence
 
 import numpy as np
 
-from repro.core.bandwidth import tau_prime_of
+from repro.core.bandwidth import make_plan
 from repro.core.delay_model import DelayModel
 from repro.core.plan import BatchPlan
 from repro.core.quality_model import QualityModel
@@ -68,6 +68,5 @@ def simulate(scn: Scenario, alloc: np.ndarray, plan: BatchPlan,
 
 def run_scheme(scn: Scenario, scheduler, delay: DelayModel,
                quality: QualityModel, alloc: np.ndarray) -> SimResult:
-    tp = tau_prime_of(scn, alloc)
-    plan = scheduler(scn.services, tp, delay, quality)
+    _, plan = make_plan(scn, alloc, scheduler, delay, quality)
     return simulate(scn, alloc, plan, quality)

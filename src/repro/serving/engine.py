@@ -32,7 +32,6 @@ from repro.core.delay_model import DelayModel
 from repro.core.plan import BatchPlan
 from repro.core.quality_model import QualityModel
 from repro.core.service import ServiceRequest
-from repro.core.stacking import stacking
 from repro.models import api
 
 
@@ -67,13 +66,18 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, run: RunConfig,
                  max_len: int, delay: Optional[DelayModel] = None,
                  quality: Optional[QualityModel] = None,
-                 extras=None):
+                 extras=None, scheduler="stacking"):
+        # registry name or Scheduler callable (repro.api); lazy import
+        # keeps serving -> api -> serving from becoming an import cycle
+        from repro.api.registry import SCHEDULERS
         self.cfg, self.params, self.run = cfg, params, run
         self.max_len = max_len
         self.delay = delay or DelayModel(a=0.002, b=0.02)
         self.quality = quality or TokenQuality()
+        self.scheduler = SCHEDULERS.resolve(scheduler)
         self.extras = extras
         self.requests: Dict[int, Request] = {}
+        self.last_timings: List[tuple] = []
         self._next_id = 0
         self._prefill = jax.jit(api.make_prefill_step(cfg, run, max_len))
         self._decode = jax.jit(api.make_decode_step(cfg, run))
@@ -120,12 +124,13 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def plan(self) -> BatchPlan:
-        """STACKING over queued requests: token budget from deadlines."""
+        """Scheduler (default STACKING) over queued requests: token
+        budget from deadlines."""
         svcs = [ServiceRequest(id=r.id, deadline=r.deadline,
                                spectral_eff=1.0)
                 for r in self.requests.values()]
         tau_prime = {r.id: r.deadline for r in self.requests.values()}
-        return stacking(svcs, tau_prime, self.delay, self.quality)
+        return self.scheduler(svcs, tau_prime, self.delay, self.quality)
 
     def _ensure_prefilled(self, rids: List[int]) -> None:
         todo = [rid for rid in rids if self.requests[rid].cache is None]
@@ -143,9 +148,16 @@ class ServingEngine:
                     lambda ax, x: x[_slice_at(x.ndim, ax, i)],
                     self._batch_axes, cache)
 
-    def execute(self, plan: BatchPlan, sample_key=None) -> Dict[int, list]:
-        """Run the plan: one batched decode_step per plan batch."""
+    def execute(self, plan: BatchPlan, sample_key=None,
+                timed: bool = False) -> Dict[int, list]:
+        """Run the plan: one batched decode_step per plan batch.
+
+        timed: record steady-state (batch_size, seconds) per batch in
+        ``self.last_timings`` (Fig.-1a measurement during serving; the
+        provisioner's calibrate->replan loop refits g(X) from these).
+        """
         key = sample_key if sample_key is not None else jax.random.PRNGKey(0)
+        self.last_timings = []
         for batch in plan.batches:
             rids = [k for k, _ in batch]
             self._ensure_prefilled(rids)
@@ -157,9 +169,19 @@ class ServingEngine:
                 [[self.requests[rid].generated[-1]
                   if self.requests[rid].generated
                   else self.requests[rid].prompt[-1]] for rid in rids])
-            logits, stacked = self._decode(self.params,
-                                           jnp.asarray(last, jnp.int32),
-                                           stacked, self.extras)
+            toks = jnp.asarray(last, jnp.int32)
+            if timed:
+                warm = self._decode(self.params, toks, stacked, self.extras)
+                jax.block_until_ready(warm)
+                t0 = time.perf_counter()
+                out = self._decode(self.params, toks, stacked, self.extras)
+                jax.block_until_ready(out)
+                self.last_timings.append(
+                    (len(rids), time.perf_counter() - t0))
+                logits, stacked = out
+            else:
+                logits, stacked = self._decode(self.params, toks,
+                                               stacked, self.extras)
             nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
             for i, rid in enumerate(rids):
                 self.requests[rid].generated.append(int(nxt[i]))

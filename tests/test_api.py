@@ -1,0 +1,194 @@
+"""Unified provisioner API: registries, protocols, Provisioner end-to-end
+on both workloads, and old-path/new-path equivalence on fixed seeds."""
+
+import numpy as np
+import pytest
+
+from repro.api import (ALLOCATORS, SCHEDULERS, WORKLOADS, Provisioner,
+                       get_allocator, get_scheduler, get_workload,
+                       list_allocators, list_schedulers, list_workloads,
+                       register_scheduler)
+from repro.core.bandwidth import evaluate, make_plan, pso_allocate
+from repro.core.delay_model import DelayModel
+from repro.core.optimal import optimal_mean_fid
+from repro.core.quality_model import PowerLawFID
+from repro.core.service import ServiceRequest, make_scenario
+from repro.core.simulator import run_scheme
+from repro.core.stacking import stacking
+
+DELAY = DelayModel()
+QUALITY = PowerLawFID()
+
+
+class TestRegistries:
+    def test_expected_entries_present(self):
+        for name in ("stacking", "greedy", "equal_steps", "optimal",
+                     "fixed_size", "single_instance"):
+            assert name in SCHEDULERS
+        for name in ("equal", "inv_se", "pso", "coordinate"):
+            assert name in ALLOCATORS
+        for name in ("diffusion", "llm_decode"):
+            assert name in WORKLOADS
+        assert list_schedulers() == sorted(list_schedulers())
+        assert "pso" in list_allocators()
+        assert "diffusion" in list_workloads()
+
+    def test_lookup_returns_the_underlying_callable(self):
+        assert get_scheduler("stacking") is stacking
+
+    def test_unknown_name_raises_with_candidates(self):
+        with pytest.raises(KeyError, match="unknown scheduler 'nope'"):
+            get_scheduler("nope")
+        with pytest.raises(KeyError, match="registered:.*pso"):
+            get_allocator("psso")
+        with pytest.raises(KeyError, match="unknown workload"):
+            get_workload("video")
+
+    def test_duplicate_registration_rejected(self):
+        with pytest.raises(ValueError, match="already registered"):
+            register_scheduler("stacking", stacking)
+
+    def test_resolve_passes_instances_through(self):
+        def my_sched(services, tau_prime, delay, quality):
+            return stacking(services, tau_prime, delay, quality)
+        assert SCHEDULERS.resolve(my_sched) is my_sched
+
+
+class TestSharedPlanHelper:
+    def test_evaluate_and_run_scheme_agree_via_make_plan(self):
+        """The dedup satellite: both paths must see the identical plan."""
+        scn = make_scenario(K=8, seed=5)
+        alloc = get_allocator("inv_se")(scn)
+        tp, plan = make_plan(scn, alloc, stacking, DELAY, QUALITY)
+        fid = evaluate(scn, alloc, stacking, DELAY, QUALITY)
+        sim = run_scheme(scn, stacking, DELAY, QUALITY, alloc)
+        assert fid == pytest.approx(QUALITY.mean_fid(
+            [plan.steps_completed[s.id] for s in scn.services]))
+        assert sim.mean_fid == pytest.approx(fid)
+
+
+class TestNewSchedulers:
+    def test_equal_steps_valid_and_balanced(self):
+        taus = {i: 10.0 for i in range(6)}
+        svcs = [ServiceRequest(id=i, deadline=10.0, spectral_eff=7.0)
+                for i in range(6)]
+        plan = get_scheduler("equal_steps")(svcs, taus, DELAY, QUALITY)
+        plan.validate(gen_deadlines=taus)
+        steps = list(plan.steps_completed.values())
+        assert max(steps) - min(steps) <= 1
+
+    @pytest.mark.parametrize("taus", [
+        [2.0, 3.0, 4.0],
+        # boundary case: 5 solo steps for service 0 cost exactly
+        # 5*(a+b) = 1.8915 <= 1.894 — grid-quantized DPs got this wrong
+        [1.894, 7.944],
+    ])
+    def test_optimal_matches_dp_bound_and_beats_stacking(self, taus):
+        tp = {i: t for i, t in enumerate(taus)}
+        svcs = [ServiceRequest(id=i, deadline=t, spectral_eff=7.0)
+                for i, t in enumerate(taus)]
+        plan = get_scheduler("optimal")(svcs, tp, DELAY, QUALITY)
+        plan.validate(gen_deadlines=tp)
+        got = QUALITY.mean_fid(list(plan.steps_completed.values()))
+        bound = optimal_mean_fid(taus, DELAY, QUALITY)
+        st = QUALITY.mean_fid(list(stacking(
+            svcs, tp, DELAY, QUALITY).steps_completed.values()))
+        assert got <= st + 1e-9           # exact search never loses to Alg.1
+        assert got == pytest.approx(bound, abs=1e-9)  # plan == scalar DP
+
+    def test_optimal_never_loses_on_random_instances(self):
+        rng = np.random.default_rng(0)
+        for _ in range(10):
+            taus = list(rng.uniform(1.5, 6.0, size=3))
+            tp = {i: t for i, t in enumerate(taus)}
+            svcs = [ServiceRequest(id=i, deadline=t, spectral_eff=7.0)
+                    for i, t in enumerate(taus)]
+            plan = get_scheduler("optimal")(svcs, tp, DELAY, QUALITY)
+            plan.validate(gen_deadlines=tp)
+            got = QUALITY.mean_fid(list(plan.steps_completed.values()))
+            assert got == pytest.approx(
+                optimal_mean_fid(taus, DELAY, QUALITY), abs=1e-9)
+            st = QUALITY.mean_fid(list(stacking(
+                svcs, tp, DELAY, QUALITY).steps_completed.values()))
+            assert got <= st + 1e-9
+
+    def test_optimal_refuses_large_instances(self):
+        svcs = [ServiceRequest(id=i, deadline=9.0, spectral_eff=7.0)
+                for i in range(9)]
+        tp = {i: 9.0 for i in range(9)}
+        with pytest.raises(AssertionError, match="exact search"):
+            get_scheduler("optimal")(svcs, tp, DELAY, QUALITY)
+
+
+class TestProvisionerAnalytic:
+    def test_matches_legacy_pso_path_on_fixed_seed(self):
+        scn = make_scenario(K=6, tau_min=4, tau_max=10, seed=3)
+        res = pso_allocate(scn, stacking, DELAY, QUALITY,
+                           num_particles=6, iters=4, seed=0)
+        legacy_sim = run_scheme(scn, stacking, DELAY, QUALITY, res.alloc)
+
+        prov = Provisioner(scn, scheduler="stacking", allocator="pso",
+                           allocator_kwargs=dict(num_particles=6, iters=4,
+                                                 seed=0))
+        report = prov.run()
+        assert np.allclose(report.allocation, res.alloc)
+        assert report.sim.mean_fid == pytest.approx(legacy_sim.mean_fid)
+        assert report.plan.steps_completed == {
+            o.id: o.steps for o in legacy_sim.outcomes}
+        assert report.content is None          # no workload attached
+        assert report.workload_name == ""
+
+    def test_allocator_names_interchangeable(self):
+        scn = make_scenario(K=5, seed=9)
+        for name in ("equal", "inv_se", "coordinate"):
+            report = Provisioner(scn, scheduler="greedy",
+                                 allocator=name).run()
+            assert report.allocation.sum() == pytest.approx(
+                scn.total_bandwidth_hz, rel=1e-6)
+            report.plan.validate(gen_deadlines=report.tau_prime)
+
+    def test_refit_requires_timings(self):
+        scn = make_scenario(K=4, seed=0)
+        report = Provisioner(scn, allocator="equal").run()
+        with pytest.raises(ValueError, match="distinct sizes"):
+            report.refit_delay()
+
+    def test_refit_without_workload_fails_before_running(self):
+        scn = make_scenario(K=4, seed=0)
+        with pytest.raises(ValueError, match="attach a workload"):
+            Provisioner(scn, allocator="equal").run(refit=True)
+
+
+@pytest.mark.slow
+class TestProvisionerWorkloads:
+    def test_diffusion_end_to_end(self):
+        import jax
+        from repro.api import DiffusionWorkload
+        from repro.configs.ddim_cifar10 import SMOKE
+        scn = make_scenario(K=3, tau_min=3.0, tau_max=6.0, seed=2)
+        prov = Provisioner(scn, workload=DiffusionWorkload(cfg=SMOKE),
+                           scheduler="stacking", allocator="inv_se")
+        report = prov.run(jax.random.PRNGKey(1), timed=True)
+        report.plan.validate(gen_deadlines=report.tau_prime)
+        assert set(report.content) == {s.id for s in scn.services}
+        assert all(np.isfinite(v).all() for v in report.content.values())
+        assert len(report.timings) == report.plan.num_batches
+        # calibrate->replan: timings refit the delay model in place
+        if len({x for x, _ in report.timings}) >= 2:
+            refit = report.refit_delay()
+            assert refit.b >= 0 or refit.a >= 0    # a sane affine fit
+
+    def test_llm_decode_end_to_end(self):
+        import jax
+        scn = make_scenario(K=3, tau_min=0.8, tau_max=1.5,
+                            content_bits=1024.0, seed=4)
+        prov = Provisioner(scn, workload="llm_decode",
+                           scheduler="stacking", allocator="inv_se")
+        report = prov.run(jax.random.PRNGKey(0))
+        report.plan.validate(gen_deadlines=report.tau_prime)
+        assert set(report.content) == {s.id for s in scn.services}
+        for sid, toks in report.content.items():
+            assert len(toks) == report.plan.steps_completed[sid]
+        assert report.workload_name == "llm_decode"
+        # the LLM quality model drove the plan, not the FID power law
+        assert type(report.quality).__name__ == "TokenQuality"

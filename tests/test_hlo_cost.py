@@ -10,7 +10,10 @@ from repro.launch.hlo_cost import analyze_hlo
 
 def _cost(fn, *specs):
     compiled = jax.jit(fn).lower(*specs).compile()
-    return analyze_hlo(compiled.as_text()), compiled.cost_analysis()
+    xla = compiled.cost_analysis()
+    if isinstance(xla, list):        # older jax wraps the dict in a list
+        xla = xla[0]
+    return analyze_hlo(compiled.as_text()), xla
 
 
 def test_scan_matches_unrolled_flops():

@@ -1,14 +1,9 @@
-"""STACKING + baselines: unit tests and hypothesis property tests.
+"""STACKING + baselines unit tests.
 
-The properties are the paper's constraints (1), (2), (6), (7), (14) —
-``BatchPlan.validate`` checks them all — plus dominance relations the
-algorithm is designed to satisfy."""
-
-import math
-
-import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+The hypothesis property tests (constraints (1), (2), (6), (7), (14) via
+``BatchPlan.validate`` on arbitrary inputs) live in
+``test_stacking_properties.py``, guarded by ``pytest.importorskip`` so a
+missing ``hypothesis`` skips them instead of erroring collection."""
 
 from repro.core.baselines import (fixed_size_batching, greedy_batching,
                                   single_instance)
@@ -16,7 +11,7 @@ from repro.core.delay_model import DelayModel
 from repro.core.optimal import optimal_mean_fid
 from repro.core.quality_model import PowerLawFID
 from repro.core.service import ServiceRequest, make_scenario
-from repro.core.stacking import stacking, stacking_pass
+from repro.core.stacking import stacking
 
 DELAY = DelayModel()          # paper constants
 QUALITY = PowerLawFID()
@@ -108,61 +103,3 @@ class TestBaselines:
         plan = fixed_size_batching(_services(taus), _tau_prime(taus), DELAY)
         plan.validate(gen_deadlines=_tau_prime(taus))
         assert max(len(b) for b in plan.batches) <= 5
-
-
-# ---------------------------------------------------------------------------
-# Property-based (hypothesis)
-# ---------------------------------------------------------------------------
-
-taus_strategy = st.lists(
-    st.floats(min_value=0.05, max_value=30.0, allow_nan=False,
-              allow_infinity=False),
-    min_size=1, max_size=12)
-
-
-@settings(max_examples=60, deadline=None)
-@given(taus=taus_strategy, t_star=st.integers(1, 50))
-def test_stacking_pass_satisfies_constraints(taus, t_star):
-    """One T* sweep satisfies (1),(2),(6),(7),(14) for arbitrary inputs."""
-    tp = _tau_prime(taus)
-    plan = stacking_pass(list(range(len(taus))), tp, DELAY, t_star)
-    plan.validate(gen_deadlines=tp)
-
-
-@settings(max_examples=30, deadline=None)
-@given(taus=taus_strategy)
-def test_stacking_full_search_valid_and_bounded(taus):
-    svcs = _services(taus)
-    tp = _tau_prime(taus)
-    plan = stacking(svcs, tp, DELAY, QUALITY)
-    plan.validate(gen_deadlines=tp)
-    for k, t in tp.items():
-        # no service exceeds its dedicated-batch upper bound
-        assert plan.steps_completed[k] <= max(0, DELAY.max_steps(t))
-
-
-@settings(max_examples=30, deadline=None)
-@given(taus=st.lists(st.floats(min_value=1.0, max_value=25.0),
-                     min_size=2, max_size=10))
-def test_monotone_in_deadline(taus):
-    """Growing every deadline can't hurt mean quality (dominance)."""
-    svcs = _services(taus)
-    tp = _tau_prime(taus)
-    plan1 = stacking(svcs, tp, DELAY, QUALITY)
-    q1 = QUALITY.mean_fid(list(plan1.steps_completed.values()))
-    tp2 = {k: v + 5.0 for k, v in tp.items()}
-    plan2 = stacking(svcs, tp2, DELAY, QUALITY)
-    q2 = QUALITY.mean_fid(list(plan2.steps_completed.values()))
-    assert q2 <= q1 + 1e-6
-
-
-@settings(max_examples=25, deadline=None)
-@given(taus=taus_strategy)
-def test_baselines_satisfy_constraints(taus):
-    svcs = _services(taus)
-    tp = _tau_prime(taus)
-    for sched in (greedy_batching, fixed_size_batching):
-        plan = sched(svcs, tp, DELAY)
-        plan.validate(gen_deadlines=tp)
-    plan = single_instance(svcs, tp, DELAY, QUALITY)
-    plan.validate(gen_deadlines=tp)
