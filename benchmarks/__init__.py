@@ -1,0 +1,16 @@
+"""Benchmark suites (one module per paper figure/table + beyond-paper).
+
+``python -m benchmarks.run`` from the repo root must be able to import
+``repro`` even though nothing is pip-installed; pytest gets this from
+``pythonpath = src`` in pyproject.toml, so this shim covers the plain
+interpreter the same way.  Installed or PYTHONPATH=src environments are
+left untouched.
+"""
+
+import sys
+from pathlib import Path
+
+try:
+    import repro  # noqa: F401
+except ModuleNotFoundError:
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))

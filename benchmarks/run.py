@@ -1,7 +1,11 @@
-"""Benchmark driver: one module per paper figure/table plus the roofline
-and beyond-paper suites.  Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark driver: one module per paper figure/table plus the roofline,
+online-admission and beyond-paper suites.  Prints
+``name,us_per_call,derived`` CSV.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig1a,fig2b,...]
+    python -m benchmarks.run [--only fig1a,fig2b,online,...]
+
+(run from the repo root; ``benchmarks/__init__.py`` puts ``src`` on the
+path, so no ``PYTHONPATH`` prefix is needed)
 """
 
 import argparse
@@ -11,13 +15,13 @@ import time
 from benchmarks import (ablations, beyond_paper, fig1a_delay_vs_batch,
                         fig1b_fid_vs_steps, fig2a_e2e_delay,
                         fig2b_fid_vs_services, fig2c_fid_vs_min_delay,
-                        kernels_bench, roofline_report)
+                        kernels_bench, online_admission, roofline_report)
 
 
 def api_suite(rows):
     """Registry census + analytic one-call pipeline smoke (docs/API.md)."""
-    from repro.api import (Provisioner, list_allocators, list_schedulers,
-                           list_workloads)
+    from repro.api import (Provisioner, list_admissions, list_allocators,
+                           list_schedulers, list_workloads)
     from repro.core.service import make_scenario
     rows.append(("api_schedulers", float(len(list_schedulers())),
                  "|".join(list_schedulers())))
@@ -25,6 +29,8 @@ def api_suite(rows):
                  "|".join(list_allocators())))
     rows.append(("api_workloads", float(len(list_workloads())),
                  "|".join(list_workloads())))
+    rows.append(("api_admissions", float(len(list_admissions())),
+                 "|".join(list_admissions())))
     t0 = time.time()
     report = Provisioner(make_scenario(K=8, seed=0), scheduler="stacking",
                          allocator="coordinate").run()
@@ -40,6 +46,7 @@ SUITES = {
     "fig2a": fig2a_e2e_delay.run,
     "fig2b": fig2b_fid_vs_services.run,
     "fig2c": fig2c_fid_vs_min_delay.run,
+    "online": online_admission.run,
     "roofline": roofline_report.run,
     "kernels": kernels_bench.run,
     "beyond": beyond_paper.run,

@@ -1,0 +1,152 @@
+"""Online admission front end: arrivals over time, replanning on each.
+
+    from repro.api import OnlineProvisioner
+    from repro.core.service import make_scenario
+
+    scn = make_scenario(K=12, arrival_rate=0.2, seed=0)
+    report = OnlineProvisioner(scn, scheduler="stacking",
+                               allocator="inv_se",
+                               admission="deadline_feasible").run()
+    print(report.summary())
+
+``OnlineProvisioner`` is the online sibling of ``Provisioner``: the same
+registry-named schedulers and allocators, plus a fourth registry of
+*admission policies* deciding accept/reject per arrival.  Each arrival
+triggers a trial replan (allocate -> plan over the residual scenario —
+see ``repro.core.online``); the policy inspects the outcome that replan
+projects for the newcomer and every prior in-flight state.
+
+Built-in policies:
+
+  * ``admit_all``          — accept everything (the baseline; with all
+                             arrivals at t=0 this reproduces the static
+                             pipeline exactly)
+  * ``deadline_feasible``  — accept iff the trial plan completes the
+                             newcomer within its deadline
+  * ``fid_threshold``      — accept iff the projected FID clears a bar
+                             (default 50.0; tune via ``admission_kwargs``)
+
+Custom policies register like any other component:
+
+    from repro.api import register_admission
+
+    @register_admission("vip_only")
+    def vip_only(svc, projected, states):
+        return svc.id % 2 == 0 or projected.met_deadline
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional
+
+from repro.api.registry import (ADMISSIONS, ALLOCATORS, SCHEDULERS,
+                                display_name, register_admission)
+# entry modules populate the scheduler/allocator registries on import
+from repro.api import allocators as _allocators   # noqa: F401
+from repro.api import schedulers as _schedulers   # noqa: F401
+from repro.core.delay_model import DelayModel
+from repro.core.online import OnlineResult, simulate_online
+from repro.core.quality_model import PowerLawFID, QualityModel
+from repro.core.service import Scenario, ServiceRequest
+from repro.core.simulator import ServiceOutcome
+
+
+# -- admission policies ---------------------------------------------------
+
+@register_admission("admit_all", aliases=("all",))
+def admit_all(svc: ServiceRequest, projected: ServiceOutcome,
+              states: Dict) -> bool:
+    return True
+
+
+@register_admission("deadline_feasible", aliases=("feasible",))
+def deadline_feasible(svc: ServiceRequest, projected: ServiceOutcome,
+                      states: Dict) -> bool:
+    return projected.steps > 0 and projected.met_deadline
+
+
+@register_admission("fid_threshold")
+def fid_threshold(svc: ServiceRequest, projected: ServiceOutcome,
+                  states: Dict, *, threshold: float = 50.0) -> bool:
+    return projected.steps > 0 and projected.fid <= threshold
+
+
+# -- report + facade ------------------------------------------------------
+
+@dataclasses.dataclass
+class OnlineReport:
+    """Everything one online run produced (summary mirrors
+    ``ProvisionReport.summary`` with an admission column)."""
+    scenario: Scenario
+    result: OnlineResult
+    delay: DelayModel
+    quality: QualityModel
+    scheduler_name: str = ""
+    allocator_name: str = ""
+    admission_name: str = ""
+
+    @property
+    def mean_fid(self) -> float:
+        return self.result.mean_fid
+
+    @property
+    def outage_rate(self) -> float:
+        return self.result.outage_rate
+
+    @property
+    def reject_rate(self) -> float:
+        return self.result.reject_rate
+
+    def summary(self) -> str:
+        head = (f"[online] scheduler={self.scheduler_name} "
+                f"allocator={self.allocator_name} "
+                f"admission={self.admission_name}")
+        return head + "\n" + self.result.summary()
+
+
+class OnlineProvisioner:
+    """Event-driven counterpart of ``Provisioner``: requests arrive at
+    ``ServiceRequest.arrival``, each admitted arrival re-runs
+    allocate -> plan over the residual scenario with in-flight batches
+    pinned.  ``scheduler`` / ``allocator`` / ``admission`` take registry
+    names or protocol instances; ``allocator_kwargs`` /
+    ``admission_kwargs`` pass through to the underlying callables."""
+
+    def __init__(self, scenario: Scenario, scheduler="stacking",
+                 allocator="pso", admission="admit_all",
+                 delay: Optional[DelayModel] = None,
+                 quality: Optional[QualityModel] = None,
+                 allocator_kwargs: Optional[dict] = None,
+                 admission_kwargs: Optional[dict] = None):
+        self.scenario = scenario
+        self.scheduler_name = display_name(scheduler)
+        self.allocator_name = display_name(allocator)
+        self.admission_name = display_name(admission)
+        self.scheduler = SCHEDULERS.resolve(scheduler)
+        self.allocator = ALLOCATORS.resolve(allocator)
+        self.admission = ADMISSIONS.resolve(admission)
+        self.delay = delay if delay is not None else DelayModel()
+        self.quality = quality if quality is not None else PowerLawFID()
+        self.allocator_kwargs = dict(allocator_kwargs or {})
+        self.admission_kwargs = dict(admission_kwargs or {})
+
+    def run(self, *, validate: bool = True) -> OnlineReport:
+        allocator = self.allocator
+        if self.allocator_kwargs:
+            allocator = functools.partial(allocator,
+                                          **self.allocator_kwargs)
+        admission = self.admission
+        if self.admission_kwargs:
+            admission = functools.partial(admission,
+                                          **self.admission_kwargs)
+        result = simulate_online(
+            self.scenario, self.scheduler, allocator,
+            delay=self.delay, quality=self.quality,
+            admission=admission, validate=validate)
+        return OnlineReport(
+            scenario=self.scenario, result=result, delay=self.delay,
+            quality=self.quality, scheduler_name=self.scheduler_name,
+            allocator_name=self.allocator_name,
+            admission_name=self.admission_name)

@@ -9,6 +9,11 @@ on the workload's real model, and bundles everything a figure script or
 serving loop needs into a ``ProvisionReport``.  Components are registry
 names or protocol instances; omitting the workload gives the pure
 analytic pipeline (allocation + plan + simulated timeline, no model).
+
+For requests arriving *over time* instead of a static batch, the
+event-driven sibling ``repro.api.online.OnlineProvisioner`` replays this
+same allocate -> plan composition on every admitted arrival
+(docs/SCENARIOS.md).
 """
 
 from __future__ import annotations
@@ -19,7 +24,8 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.api.protocols import WorkloadOutput
-from repro.api.registry import ALLOCATORS, SCHEDULERS, WORKLOADS
+from repro.api.registry import (ALLOCATORS, SCHEDULERS, WORKLOADS,
+                                display_name)
 # importing the entry modules populates the registries
 from repro.api import allocators as _allocators   # noqa: F401
 from repro.api import schedulers as _schedulers   # noqa: F401
@@ -52,6 +58,10 @@ class ProvisionReport:
     @property
     def mean_fid(self) -> float:
         return self.sim.mean_fid
+
+    @property
+    def outage_rate(self) -> float:
+        return self.sim.outage_rate
 
     def refit_delay(self) -> DelayModel:
         """Fit g(X) = aX + b from this run's measured per-batch timings
@@ -88,10 +98,8 @@ class Provisioner:
                  quality: Optional[QualityModel] = None,
                  allocator_kwargs: Optional[dict] = None):
         self.scenario = scenario
-        self.scheduler_name = scheduler if isinstance(scheduler, str) else \
-            getattr(scheduler, "__name__", type(scheduler).__name__)
-        self.allocator_name = allocator if isinstance(allocator, str) else \
-            getattr(allocator, "__name__", type(allocator).__name__)
+        self.scheduler_name = display_name(scheduler)
+        self.allocator_name = display_name(allocator)
         self.scheduler = SCHEDULERS.resolve(scheduler)
         self.allocator = ALLOCATORS.resolve(allocator)
         wl = WORKLOADS.resolve(workload) if workload is not None else None

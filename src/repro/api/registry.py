@@ -1,9 +1,11 @@
 """String-keyed registries behind the provisioner API.
 
-Three registries — schedulers (P2 solvers), allocators (P1 solvers) and
-workloads (step executors) — so every pipeline component is addressable
-by name (``Provisioner(scn, scheduler="stacking", allocator="pso")``)
-and new variants plug in with a one-line decorator:
+Four registries — schedulers (P2 solvers), allocators (P1 solvers),
+workloads (step executors) and admissions (online accept/reject
+policies) — so every pipeline component is addressable by name
+(``Provisioner(scn, scheduler="stacking", allocator="pso")``,
+``OnlineProvisioner(scn, admission="deadline_feasible")``) and new
+variants plug in with a one-line decorator:
 
     @register_scheduler("my_sched")
     def my_sched(services, tau_prime, delay, quality): ...
@@ -52,9 +54,18 @@ class Registry:
         return name in self._items
 
 
+def display_name(spec: Any) -> str:
+    """Human-readable name for a registry spec: the string itself, or a
+    callable/instance's best-effort name (report headers use this)."""
+    if isinstance(spec, str):
+        return spec
+    return getattr(spec, "__name__", type(spec).__name__)
+
+
 SCHEDULERS = Registry("scheduler")
 ALLOCATORS = Registry("allocator")
 WORKLOADS = Registry("workload")
+ADMISSIONS = Registry("admission")
 
 
 def register_scheduler(name: str, obj: Any = None, **kw):
@@ -69,6 +80,10 @@ def register_workload(name: str, obj: Any = None, **kw):
     return WORKLOADS.register(name, obj, **kw)
 
 
+def register_admission(name: str, obj: Any = None, **kw):
+    return ADMISSIONS.register(name, obj, **kw)
+
+
 def get_scheduler(name: str) -> Callable:
     return SCHEDULERS.get(name)
 
@@ -81,6 +96,10 @@ def get_workload(name: str) -> Any:
     return WORKLOADS.get(name)
 
 
+def get_admission(name: str) -> Callable:
+    return ADMISSIONS.get(name)
+
+
 def list_schedulers() -> List[str]:
     return SCHEDULERS.names()
 
@@ -91,3 +110,7 @@ def list_allocators() -> List[str]:
 
 def list_workloads() -> List[str]:
     return WORKLOADS.names()
+
+
+def list_admissions() -> List[str]:
+    return ADMISSIONS.names()

@@ -133,9 +133,12 @@ def coordinate_refine(scn: Scenario, alloc: np.ndarray,
     for _ in range(rounds):
         improved = False
         for donor in range(K):
-            if cur[donor] - step < min_frac * B:
-                continue
             for recv in range(K):
+                # re-check per transfer: accepted moves within this sweep
+                # shrink the donor, and repeated donations must never push
+                # it through the min_frac floor (let alone negative)
+                if cur[donor] - step < min_frac * B:
+                    break
                 if recv == donor:
                     continue
                 cand = cur.copy()

@@ -40,7 +40,10 @@ def single_instance(services: Sequence[ServiceRequest],
                 starts.append(t)
                 t += g1
                 Tc[k] += 1
-        q = quality.mean_fid([Tc[k] for k in ids])
+        # counts in services order — the make_plan convention shared by
+        # every quality.mean_fid call (progress-aware online replans
+        # credit prior steps positionally, repro.core.online)
+        q = quality.mean_fid([Tc[s.id] for s in services])
         if q < best_q - 1e-12:
             best_plan = BatchPlan(batches=batches, start_times=starts,
                                   steps_completed=Tc, delay=delay)

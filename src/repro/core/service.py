@@ -4,12 +4,21 @@ K devices, deadlines uniform in [tau_min, tau_max] (paper: 7..20 s),
 spectral efficiency eta_k uniform in [5, 10] bit/s/Hz, total bandwidth
 B = 40 kHz, content size S identical across services (one generated
 image; default 3 KiB ~= a 32x32 PNG).
+
+Beyond the paper's static batch (docs/SCENARIOS.md):
+
+  * ``arrival`` — request submission time (s).  The paper's setting is
+    ``arrival == 0`` for every service (the default); a Poisson process
+    (``make_scenario(..., arrival_rate=...)``) turns the same scenario
+    into the *online* admission problem solved by ``repro.core.online``.
+  * ``content_bits`` — optional per-service content size overriding the
+    scenario-level value (heterogeneous outputs: thumbnails vs. 4K).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -20,14 +29,22 @@ DEFAULT_CONTENT_BITS = 3 * 1024 * 8.0
 @dataclasses.dataclass(frozen=True)
 class ServiceRequest:
     id: int
-    deadline: float            # tau_k, end-to-end (s)
+    deadline: float            # tau_k, end-to-end, relative to arrival (s)
     spectral_eff: float        # eta_k (bit/s/Hz)
+    arrival: float = 0.0       # submission time (0 = the paper's static batch)
+    content_bits: Optional[float] = None   # per-service S; None = scenario's
 
     def tx_delay(self, bandwidth_hz: float,
                  content_bits: float = DEFAULT_CONTENT_BITS) -> float:
-        """D_ct = S / (B_k * eta_k)  (Eqs. 8, 11)."""
+        """D_ct = S / (B_k * eta_k)  (Eqs. 8, 11).
+
+        ``content_bits`` is the scenario-level default; a per-service
+        ``self.content_bits`` takes precedence when set.
+        """
+        bits = self.content_bits if self.content_bits is not None \
+            else content_bits
         rate = bandwidth_hz * self.spectral_eff
-        return content_bits / max(rate, 1e-12)
+        return bits / max(rate, 1e-12)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,12 +57,28 @@ class Scenario:
     def K(self) -> int:
         return len(self.services)
 
+    @property
+    def is_static(self) -> bool:
+        """True when every request is present at t=0 (the paper's setting)."""
+        return all(s.arrival == 0.0 for s in self.services)
+
 
 def make_scenario(K: int = 20, tau_min: float = 7.0, tau_max: float = 20.0,
                   eta_min: float = 5.0, eta_max: float = 10.0,
                   total_bandwidth_hz: float = DEFAULT_BANDWIDTH_HZ,
                   content_bits: float = DEFAULT_CONTENT_BITS,
+                  arrival_rate: Optional[float] = None,
+                  content_bits_range: Optional[Tuple[float, float]] = None,
                   seed: int = 0) -> Scenario:
+    """Sample a K-service scenario (Sec. IV constants by default).
+
+    arrival_rate: requests/s of a Poisson arrival process; service k
+        arrives at the k-th arrival epoch (cumulative Exp(1/rate)
+        inter-arrival gaps).  ``None`` (default) keeps every arrival at
+        t=0 — the paper's static batch, bit-identical to older seeds.
+    content_bits_range: (lo, hi) uniform per-service content sizes
+        (heterogeneous outputs); ``None`` keeps the shared scenario size.
+    """
     rng = np.random.default_rng(seed)
     services = [
         ServiceRequest(
@@ -55,6 +88,19 @@ def make_scenario(K: int = 20, tau_min: float = 7.0, tau_max: float = 20.0,
         )
         for k in range(K)
     ]
+    # extra draws happen *after* the base loop so a given seed yields the
+    # same deadlines/spectral efficiencies with or without these features
+    if arrival_rate is not None:
+        assert arrival_rate > 0, "arrival_rate must be positive (requests/s)"
+        gaps = rng.exponential(1.0 / arrival_rate, size=K)
+        arrivals = np.cumsum(gaps)
+        services = [dataclasses.replace(s, arrival=float(t))
+                    for s, t in zip(services, arrivals)]
+    if content_bits_range is not None:
+        lo, hi = content_bits_range
+        bits = rng.uniform(lo, hi, size=K)
+        services = [dataclasses.replace(s, content_bits=float(b))
+                    for s, b in zip(services, bits)]
     return Scenario(services=services,
                     total_bandwidth_hz=total_bandwidth_hz,
                     content_bits=content_bits)

@@ -1,6 +1,11 @@
 """End-to-end service simulator: composes a bandwidth allocation and a
 batch-denoising plan into per-service timelines (Fig. 2a) and aggregate
-quality (Figs. 2b/2c)."""
+quality (Figs. 2b/2c).
+
+``ServiceOutcome`` is the shared per-service record: the static
+``simulate`` below, the event-driven ``repro.core.online`` simulator and
+its admission projections all emit it, so figure scripts and admission
+policies read one schema."""
 
 from __future__ import annotations
 

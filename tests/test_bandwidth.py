@@ -59,3 +59,24 @@ class TestAllocators:
         assert res.fid <= f0 + 1e-9
         assert res.alloc.sum() == pytest.approx(scn.total_bandwidth_hz,
                                                 rel=1e-6)
+
+    def test_coordinate_refine_respects_floor_per_transfer(self):
+        """Regression: the min_frac floor was only checked once per donor
+        sweep, so several accepted transfers from one donor could push it
+        below the floor — even negative.  Make many transfers profitable
+        with a quality model that loves a single service."""
+        class FavoriteOnly:
+            def fid(self, steps):
+                return QUALITY.fid(steps)
+
+            def mean_fid(self, counts):
+                return QUALITY.fid(counts[0])   # only service 0 matters
+
+        scn = make_scenario(K=6, tau_min=4, tau_max=8, seed=2)
+        min_frac = 1e-3
+        res = coordinate_refine(scn, equal_allocate(scn), _sched, DELAY,
+                                FavoriteOnly(), rounds=6,
+                                step_frac=0.2, min_frac=min_frac)
+        assert (res.alloc >= min_frac * scn.total_bandwidth_hz - 1e-9).all()
+        assert res.alloc.sum() == pytest.approx(scn.total_bandwidth_hz,
+                                                rel=1e-6)

@@ -1,0 +1,59 @@
+"""Documented examples cannot rot: every fenced ``python`` block in
+README.md and docs/*.md is executed.
+
+Blocks within one file share a namespace (they are concatenated in
+order, so later snippets may reuse earlier names — the docs read like
+one session).  Each file runs in its own subprocess so registry
+registrations and jax state cannot leak between docs or into other
+tests."""
+
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+FENCE = re.compile(r"^```python[ \t]*\n(.*?)^```", re.M | re.S)
+
+
+def _doc_files():
+    docs = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+    return [p for p in docs if p.exists()]
+
+
+def _params():
+    heavy = {"API.md"}                    # executes the real U-Net
+    return [pytest.param(p, id=p.name,
+                         marks=[pytest.mark.slow] if p.name in heavy
+                         else [])
+            for p in _doc_files()]
+
+
+def test_docs_exist_and_have_snippets():
+    names = {p.name for p in _doc_files()}
+    assert {"README.md", "API.md", "SCENARIOS.md"} <= names
+    for p in _doc_files():
+        if p.name in ("README.md", "API.md", "SCENARIOS.md"):
+            assert FENCE.findall(p.read_text()), f"no snippets in {p.name}"
+
+
+@pytest.mark.parametrize("doc", _params())
+def test_doc_snippets_execute(doc):
+    blocks = FENCE.findall(doc.read_text())
+    if not blocks:
+        pytest.skip(f"{doc.name} has no python snippets")
+    source = "\n\n".join(blocks)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, "-c", source], cwd=ROOT, env=env,
+        capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, (
+        f"snippets from {doc.name} failed "
+        f"(blocks are concatenated in file order):\n"
+        f"--- stdout ---\n{proc.stdout[-2000:]}\n"
+        f"--- stderr ---\n{proc.stderr[-4000:]}")

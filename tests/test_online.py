@@ -1,0 +1,289 @@
+"""Online admission: static-equivalence, event-queue determinism,
+admission-policy invariants, Poisson arrivals and heterogeneous content
+sizes (ISSUE: tentpole test coverage)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import (ADMISSIONS, OnlineProvisioner, Provisioner,
+                       get_admission, get_allocator, get_scheduler,
+                       list_admissions)
+from repro.core.bandwidth import tau_prime_of
+from repro.core.delay_model import DelayModel
+from repro.core.online import OnlineSimulation, simulate_online
+from repro.core.quality_model import PowerLawFID
+from repro.core.service import Scenario, ServiceRequest, make_scenario
+
+DELAY = DelayModel()
+QUALITY = PowerLawFID()
+
+
+class TestAdmissionRegistry:
+    def test_expected_entries_present(self):
+        for name in ("admit_all", "deadline_feasible", "fid_threshold"):
+            assert name in ADMISSIONS
+        assert "feasible" in ADMISSIONS          # alias
+        assert list_admissions() == sorted(list_admissions())
+
+    def test_unknown_name_raises_with_candidates(self):
+        with pytest.raises(KeyError, match="unknown admission"):
+            get_admission("bouncer")
+
+
+class TestStaticEquivalence:
+    """All arrivals at t=0 must reproduce the static pipeline exactly."""
+
+    @pytest.mark.parametrize("scheduler", ["stacking", "greedy",
+                                           "equal_steps"])
+    @pytest.mark.parametrize("allocator", ["inv_se", "equal"])
+    def test_outcomes_identical(self, scheduler, allocator):
+        scn = make_scenario(K=8, seed=3)
+        assert scn.is_static
+        static = Provisioner(scn, scheduler=scheduler,
+                             allocator=allocator).run()
+        online = OnlineProvisioner(scn, scheduler=scheduler,
+                                   allocator=allocator).run()
+        assert online.result.outcomes == static.sim.outcomes
+        assert online.mean_fid == static.mean_fid
+        assert online.outage_rate == static.outage_rate
+        assert online.reject_rate == 0.0
+
+    def test_outcomes_identical_under_pso(self):
+        scn = make_scenario(K=6, tau_min=4, tau_max=10, seed=7)
+        kw = dict(num_particles=6, iters=4, seed=0)
+        static = Provisioner(scn, scheduler="stacking", allocator="pso",
+                             allocator_kwargs=kw).run()
+        online = OnlineProvisioner(scn, scheduler="stacking",
+                                   allocator="pso",
+                                   allocator_kwargs=kw).run()
+        assert online.result.outcomes == static.sim.outcomes
+
+    def test_infeasible_service_is_an_outage_row_in_both(self):
+        svcs = [ServiceRequest(id=0, deadline=10.0, spectral_eff=7.0),
+                ServiceRequest(id=1, deadline=0.01, spectral_eff=7.0)]
+        scn = Scenario(services=svcs)
+        static = Provisioner(scn, scheduler="stacking",
+                             allocator="equal").run()
+        online = OnlineProvisioner(scn, scheduler="stacking",
+                                   allocator="equal").run()
+        assert online.result.outcomes == static.sim.outcomes
+        dead = online.result.outcomes[1]
+        assert dead.steps == 0 and not dead.met_deadline
+        assert dead.fid == QUALITY.fid_at_zero
+
+
+class TestEventQueue:
+    def test_deterministic_under_fixed_seed(self):
+        scn = make_scenario(K=10, arrival_rate=0.3, seed=11)
+        runs = [OnlineProvisioner(scn, scheduler="stacking",
+                                  allocator="inv_se").run()
+                for _ in range(2)]
+        assert runs[0].result.outcomes == runs[1].result.outcomes
+        assert [d.admitted for d in runs[0].result.decisions] == \
+               [d.admitted for d in runs[1].result.decisions]
+
+    def test_arrivals_processed_in_time_order(self):
+        scn = make_scenario(K=9, arrival_rate=1.0, seed=2)
+        rep = OnlineProvisioner(scn, scheduler="greedy",
+                                allocator="equal").run()
+        arr = [d.arrival for d in rep.result.decisions]
+        assert arr == sorted(arr)
+
+    def test_in_flight_batch_is_pinned(self):
+        """A batch running when an arrival lands always finishes; the
+        newcomer's first step starts no earlier than that batch's end."""
+        delay = DelayModel(a=0.0, b=1.0)           # every batch takes 1 s
+        svcs = [ServiceRequest(id=0, deadline=4.5, spectral_eff=1e9),
+                ServiceRequest(id=1, deadline=4.5, spectral_eff=1e9,
+                               arrival=0.5)]
+        scn = Scenario(services=svcs)
+        sim = OnlineSimulation(scn, get_scheduler("greedy"),
+                               get_allocator("equal"), delay, QUALITY,
+                               admission=lambda *a: True)
+        res = sim.run()
+        by_id = {o.id: o for o in res.outcomes}
+        # svc 0's first batch (t=0..1) ran alone; svc 1 starts at t>=1,
+        # so its generation ends on whole-second boundaries after 1 s
+        assert by_id[0].steps >= 1
+        assert sim.states[1].gen_end >= 1.0 + 1.0 - 1e-9
+        # replanning happened once per arrival
+        assert sim.replan_count == 2
+
+    def test_progress_carries_across_replans(self):
+        """Steps executed before a replan count toward the final total."""
+        delay = DelayModel(a=0.0, b=1.0)
+        svcs = [ServiceRequest(id=0, deadline=6.2, spectral_eff=1e9),
+                ServiceRequest(id=1, deadline=4.2, spectral_eff=1e9,
+                               arrival=2.5)]
+        scn = Scenario(services=svcs)
+        res = simulate_online(scn, get_scheduler("greedy"),
+                              get_allocator("equal"), delay, QUALITY)
+        by_id = {o.id: o for o in res.outcomes}
+        # svc 0 ran solo batches at t=0,1,2 (pinned through the arrival),
+        # then shared batches until its budget ran out
+        assert by_id[0].steps >= 4
+        assert by_id[0].met_deadline and by_id[1].met_deadline
+
+
+class TestAdmissionPolicies:
+    def test_admit_all_rejects_nothing(self):
+        scn = make_scenario(K=8, arrival_rate=2.0, seed=0)
+        rep = OnlineProvisioner(scn, scheduler="stacking",
+                                allocator="inv_se").run()
+        assert rep.reject_rate == 0.0
+        assert len(rep.result.outcomes) == scn.K
+
+    def test_deadline_feasible_admitted_implies_projected_feasible(self):
+        scn = make_scenario(K=14, tau_min=1.0, tau_max=3.0,
+                            arrival_rate=4.0, seed=1)
+        rep = OnlineProvisioner(scn, scheduler="stacking",
+                                allocator="inv_se",
+                                admission="deadline_feasible").run()
+        for d in rep.result.decisions:
+            if d.admitted:
+                # the invariant the policy enforces: the adopted trial
+                # plan (which validate()d) met the newcomer's deadline
+                assert d.projected.steps > 0
+                assert d.projected.met_deadline
+            else:
+                assert not d.projected.met_deadline
+
+    def test_fid_threshold_respects_threshold_and_kwargs(self):
+        scn = make_scenario(K=14, tau_min=1.0, tau_max=3.0,
+                            arrival_rate=4.0, seed=1)
+        strict = OnlineProvisioner(
+            scn, scheduler="stacking", allocator="inv_se",
+            admission="fid_threshold",
+            admission_kwargs=dict(threshold=20.0)).run()
+        for d in strict.result.decisions:
+            assert d.admitted == (d.projected.steps > 0
+                                  and d.projected.fid <= 20.0)
+        lax = OnlineProvisioner(
+            scn, scheduler="stacking", allocator="inv_se",
+            admission="fid_threshold",
+            admission_kwargs=dict(threshold=1e9)).run()
+        assert lax.reject_rate <= strict.reject_rate
+
+    def test_rejected_services_do_not_consume_the_server(self):
+        scn = make_scenario(K=10, tau_min=1.0, tau_max=2.0,
+                            arrival_rate=5.0, seed=3)
+        none = OnlineProvisioner(
+            scn, scheduler="stacking", allocator="inv_se",
+            admission=lambda svc, projected, states: False).run()
+        assert none.reject_rate == 1.0
+        assert none.result.outcomes == []
+        assert np.isnan(none.mean_fid)
+
+    def test_custom_policy_instance_passes_through(self):
+        scn = make_scenario(K=6, arrival_rate=1.0, seed=4)
+        evens = OnlineProvisioner(
+            scn, scheduler="greedy", allocator="equal",
+            admission=lambda svc, projected, states: svc.id % 2 == 0).run()
+        assert evens.result.admitted_ids == [0, 2, 4]
+        assert evens.result.rejected_ids == [1, 3, 5]
+
+
+class TestPoissonArrivals:
+    def test_default_scenarios_are_bit_identical_to_older_seeds(self):
+        """Adding the arrival machinery must not disturb existing draws."""
+        base = make_scenario(K=12, seed=5)
+        timed = make_scenario(K=12, arrival_rate=0.5, seed=5)
+        assert all(s.arrival == 0.0 for s in base.services)
+        for a, b in zip(base.services, timed.services):
+            assert a.deadline == b.deadline
+            assert a.spectral_eff == b.spectral_eff
+        assert not timed.is_static
+
+    def test_arrivals_are_increasing_and_rate_scaled(self):
+        slow = make_scenario(K=200, arrival_rate=0.1, seed=0)
+        fast = make_scenario(K=200, arrival_rate=10.0, seed=0)
+        for scn in (slow, fast):
+            arr = [s.arrival for s in scn.services]
+            assert all(b > a for a, b in zip(arr, arr[1:]))
+        # mean inter-arrival gap ~ 1/rate (law of large numbers, K=200)
+        gap = lambda scn: scn.services[-1].arrival / scn.K   # noqa: E731
+        assert gap(slow) == pytest.approx(10.0, rel=0.25)
+        assert gap(fast) == pytest.approx(0.1, rel=0.25)
+
+    def test_invalid_rate_rejected(self):
+        with pytest.raises(AssertionError, match="arrival_rate"):
+            make_scenario(K=4, arrival_rate=0.0)
+
+
+class TestHeterogeneousContentSizes:
+    def test_per_service_bits_override_tx_delay(self):
+        small = ServiceRequest(id=0, deadline=10.0, spectral_eff=5.0,
+                               content_bits=1024.0)
+        dflt = ServiceRequest(id=1, deadline=10.0, spectral_eff=5.0)
+        bw = 1000.0
+        assert small.tx_delay(bw, content_bits=8192.0) == \
+            pytest.approx(1024.0 / (bw * 5.0))
+        assert dflt.tx_delay(bw, content_bits=8192.0) == \
+            pytest.approx(8192.0 / (bw * 5.0))
+
+    def test_tau_prime_reflects_per_service_bits(self):
+        svcs = [ServiceRequest(id=0, deadline=10.0, spectral_eff=5.0,
+                               content_bits=1024.0),
+                ServiceRequest(id=1, deadline=10.0, spectral_eff=5.0)]
+        scn = Scenario(services=svcs, content_bits=8192.0)
+        alloc = np.array([1000.0, 1000.0])
+        tp = tau_prime_of(scn, alloc)
+        assert tp[0] > tp[1]                       # smaller content, more
+        assert tp[0] == pytest.approx(10.0 - 1024.0 / 5000.0)
+        assert tp[1] == pytest.approx(10.0 - 8192.0 / 5000.0)
+
+    def test_make_scenario_samples_in_range_without_disturbing_seeds(self):
+        base = make_scenario(K=10, seed=9)
+        hetero = make_scenario(K=10, seed=9,
+                               content_bits_range=(1024.0, 65536.0))
+        for a, b in zip(base.services, hetero.services):
+            assert a.deadline == b.deadline
+            assert b.content_bits is not None
+            assert 1024.0 <= b.content_bits <= 65536.0
+        assert base.services[0].content_bits is None
+
+    def test_search_allocators_never_starve_in_progress_services(self):
+        """Regression: coordinate_refine could drive a donor *negative*
+        (floor only checked once per donor sweep), and the progress-aware
+        objective made starving an almost-finished service look free —
+        its content then transmitted over ~0 Hz and arrived years late."""
+        scn = make_scenario(K=10, arrival_rate=0.4, seed=5,
+                            content_bits_range=(2048.0, 65536.0))
+        sim = OnlineSimulation(scn, get_scheduler("stacking"),
+                               get_allocator("coordinate"), DELAY,
+                               QUALITY, admission=lambda *a: True)
+        res = sim.run()
+        for st in sim.states.values():
+            if st.gen_complete:
+                assert st.bandwidth > 0.0
+        assert all(o.tx_delay < 1e3 for o in res.outcomes)
+        assert res.outage_rate == 0.0
+
+    def test_concurrent_transmissions_never_exceed_the_budget(self):
+        """The paper's P1 constraint (sum B_k = B) must hold at every
+        instant: replans allocate only the bandwidth not committed to
+        transmissions still in the air (docs/SCENARIOS.md rule 5)."""
+        scn = make_scenario(K=16, tau_min=1.0, tau_max=3.0,
+                            arrival_rate=4.0, seed=0,
+                            content_bits_range=(65536.0, 262144.0))
+        sim = OnlineSimulation(scn, get_scheduler("stacking"),
+                               get_allocator("inv_se"), DELAY, QUALITY,
+                               admission=lambda *a: True)
+        sim.run()
+        spans = [(st.gen_end, st.tx_end, st.bandwidth)
+                 for st in sim.states.values() if st.gen_complete]
+        B = scn.total_bandwidth_hz
+        for t0, _, _ in spans:       # check at every transmission start
+            in_air = sum(bw for s, e, bw in spans if s <= t0 < e)
+            assert in_air <= B + 1e-6
+
+    def test_online_runs_with_heterogeneous_sizes(self):
+        scn = make_scenario(K=8, arrival_rate=0.5, seed=2,
+                            content_bits_range=(1024.0, 131072.0))
+        rep = OnlineProvisioner(scn, scheduler="stacking",
+                                allocator="inv_se").run()
+        assert len(rep.result.outcomes) == 8
+        tx = [o.tx_delay for o in rep.result.outcomes if o.steps > 0]
+        assert len(set(round(t, 9) for t in tx)) > 1   # sizes visible
