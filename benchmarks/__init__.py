@@ -3,14 +3,19 @@
 ``python -m benchmarks.run`` from the repo root must be able to import
 ``repro`` even though nothing is pip-installed; pytest gets this from
 ``pythonpath = src`` in pyproject.toml, so this shim covers the plain
-interpreter the same way.  Installed or PYTHONPATH=src environments are
-left untouched.
+interpreter the same way.  The shim is idempotent — re-imports (or an
+``importlib.reload``) never stack duplicate ``sys.path`` entries — and
+installed or PYTHONPATH=src environments are left untouched
+(tests/test_bench_tools.py runs it from a clean subprocess).
 """
 
 import sys
 from pathlib import Path
 
+_SRC = str(Path(__file__).resolve().parent.parent / "src")
+
 try:
     import repro  # noqa: F401
 except ModuleNotFoundError:
-    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+    if _SRC not in sys.path:
+        sys.path.insert(0, _SRC)

@@ -1,0 +1,122 @@
+"""Benchmark regression gate: BENCH_*.json vs the committed baseline.
+
+    python -m benchmarks.compare bench-artifacts/BENCH_*.json \
+        --baseline benchmarks/baseline.json
+
+Exit code 0 when every gated metric holds, 1 with a findings report
+otherwise — CI runs this right after ``benchmarks.run --json`` so a PR
+that regresses the scheduler-vs-baseline numbers fails visibly.
+
+``baseline.json`` maps metric name -> gate spec:
+
+    {"metrics": {
+       "online_r0.5_stacking":    {"value": 11.2, "kind":
+                                   "lower_is_better", "rel_tol": 0.05},
+       "online_stacking_best":    {"value": 1.0, "kind": "flag"},
+       "multiserver_greedy_beats_rr": {"value": 1.0, "kind": "flag"}}}
+
+  * ``lower_is_better`` — fail when measured >
+    value * (1 + rel_tol) + abs_tol (FID-style metrics; improvements
+    always pass).
+  * ``flag``            — fail when measured < value (ordering claims
+    pinned at 1.0 must stay 1.0).
+
+A gated metric missing from the measured rows fails too — a suite that
+silently stops emitting its numbers is itself a regression.
+``--update`` rewrites the baseline's values from the measured rows
+(gate specs are kept), for refreshing after an intentional change.
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List
+
+DEFAULT_REL_TOL = 0.05
+DEFAULT_ABS_TOL = 1e-9
+
+
+def load_measured(paths) -> Dict[str, float]:
+    """name -> value over every row of every BENCH_*.json given."""
+    measured: Dict[str, float] = {}
+    for p in paths:
+        payload = json.loads(Path(p).read_text())
+        for row in payload.get("rows", []):
+            measured[row["name"]] = float(row["value"])
+    return measured
+
+
+def compare(baseline: dict, measured: Dict[str, float]) -> List[str]:
+    """Every violated gate as a human-readable finding (empty = pass)."""
+    findings = []
+    for name, spec in baseline.get("metrics", {}).items():
+        want = float(spec["value"])
+        kind = spec.get("kind", "lower_is_better")
+        if name not in measured:
+            findings.append(f"{name}: gated metric missing from "
+                            f"measured rows")
+            continue
+        got = measured[name]
+        if kind == "flag":
+            if got < want:
+                findings.append(f"{name}: flag dropped to {got:g} "
+                                f"(baseline {want:g})")
+        elif kind == "lower_is_better":
+            rel = float(spec.get("rel_tol", DEFAULT_REL_TOL))
+            abs_tol = float(spec.get("abs_tol", DEFAULT_ABS_TOL))
+            limit = want * (1.0 + rel) + abs_tol
+            if got > limit:
+                findings.append(
+                    f"{name}: {got:.4f} > {limit:.4f} "
+                    f"(baseline {want:.4f}, rel_tol {rel:.0%})")
+        else:
+            findings.append(f"{name}: unknown gate kind '{kind}'")
+    return findings
+
+
+def update_baseline(baseline: dict,
+                    measured: Dict[str, float]) -> dict:
+    """Refresh gate values from measured rows, keeping specs."""
+    out = {"metrics": {}}
+    for name, spec in baseline.get("metrics", {}).items():
+        new = dict(spec)
+        if name in measured:
+            new["value"] = measured[name]
+        out["metrics"][name] = new
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("bench", nargs="+", help="BENCH_*.json files")
+    ap.add_argument("--baseline", default="benchmarks/baseline.json")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline's values from the "
+                         "measured rows instead of gating")
+    args = ap.parse_args(argv)
+
+    baseline = json.loads(Path(args.baseline).read_text())
+    measured = load_measured(args.bench)
+
+    if args.update:
+        refreshed = update_baseline(baseline, measured)
+        Path(args.baseline).write_text(
+            json.dumps(refreshed, indent=2) + "\n")
+        print(f"baseline refreshed: {args.baseline}")
+        return 0
+
+    findings = compare(baseline, measured)
+    gated = len(baseline.get("metrics", {}))
+    if findings:
+        print(f"benchmark regression gate FAILED "
+              f"({len(findings)}/{gated} metrics):")
+        for f in findings:
+            print(f"  - {f}")
+        return 1
+    print(f"benchmark regression gate passed ({gated} metrics)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

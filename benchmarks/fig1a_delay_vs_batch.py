@@ -4,7 +4,6 @@ g(X) = aX + b, re-measured on this container's CPU with the smoke U-Net
 see DESIGN.md §3).  Also reports the analytic TPU v5e estimate."""
 
 import jax
-import numpy as np
 
 from repro.api import DiffusionWorkload
 from repro.configs.ddim_cifar10 import SMOKE, CONFIG

@@ -26,7 +26,6 @@ def run(csv_rows):
     for r in recs:
         tag = f"{r['arch']}_{r['shape']}"
         rf = r["roofline"]
-        total = rf["compute_s"] + rf["memory_s"] + rf["collective_s"]
         csv_rows.append((f"roofline_{tag}_compute", rf["compute_s"] * 1e6,
                          "us"))
         csv_rows.append((f"roofline_{tag}_memory", rf["memory_s"] * 1e6,

@@ -1,27 +1,39 @@
-"""Benchmark driver: one module per paper figure/table plus the roofline,
-online-admission and beyond-paper suites.  Prints
-``name,us_per_call,derived`` CSV.
+"""Benchmark driver: one module per paper figure/table plus the
+roofline, online-admission, multi-server and beyond-paper suites.
+Prints ``name,us_per_call,derived`` CSV.
 
-    python -m benchmarks.run [--only fig1a,fig2b,online,...]
+    python -m benchmarks.run [--only fig1a,fig2b,online,multiserver,...]
+    python -m benchmarks.run --list
+    python -m benchmarks.run --only api,online --json bench-artifacts/
 
 (run from the repo root; ``benchmarks/__init__.py`` puts ``src`` on the
 path, so no ``PYTHONPATH`` prefix is needed)
+
+``--json DIR`` additionally writes one machine-readable
+``BENCH_<suite>.json`` per suite (rows + git SHA + wall time); CI
+uploads these as artifacts and ``benchmarks/compare.py`` gates them
+against the committed ``benchmarks/baseline.json``.
 """
 
 import argparse
+import json
+import subprocess
 import sys
 import time
+from pathlib import Path
 
 from benchmarks import (ablations, beyond_paper, fig1a_delay_vs_batch,
                         fig1b_fid_vs_steps, fig2a_e2e_delay,
                         fig2b_fid_vs_services, fig2c_fid_vs_min_delay,
-                        kernels_bench, online_admission, roofline_report)
+                        kernels_bench, multiserver, online_admission,
+                        roofline_report)
 
 
 def api_suite(rows):
     """Registry census + analytic one-call pipeline smoke (docs/API.md)."""
     from repro.api import (Provisioner, list_admissions, list_allocators,
-                           list_schedulers, list_workloads)
+                           list_placements, list_schedulers,
+                           list_workloads)
     from repro.core.service import make_scenario
     rows.append(("api_schedulers", float(len(list_schedulers())),
                  "|".join(list_schedulers())))
@@ -31,6 +43,8 @@ def api_suite(rows):
                  "|".join(list_workloads())))
     rows.append(("api_admissions", float(len(list_admissions())),
                  "|".join(list_admissions())))
+    rows.append(("api_placements", float(len(list_placements())),
+                 "|".join(list_placements())))
     t0 = time.time()
     report = Provisioner(make_scenario(K=8, seed=0), scheduler="stacking",
                          allocator="coordinate").run()
@@ -47,6 +61,7 @@ SUITES = {
     "fig2b": fig2b_fid_vs_services.run,
     "fig2c": fig2c_fid_vs_min_delay.run,
     "online": online_admission.run,
+    "multiserver": multiserver.run,
     "roofline": roofline_report.run,
     "kernels": kernels_bench.run,
     "beyond": beyond_paper.run,
@@ -54,12 +69,46 @@ SUITES = {
 }
 
 
-def main() -> None:
+def git_sha() -> str:
+    """Current commit, for stamping BENCH_*.json artifacts."""
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, cwd=Path(__file__).resolve().parent,
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def write_json(out_dir: Path, suite: str, rows, elapsed_s: float,
+               sha: str) -> Path:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / f"BENCH_{suite}.json"
+    payload = {
+        "suite": suite,
+        "git_sha": sha,
+        "elapsed_s": round(elapsed_s, 3),
+        "rows": [{"name": n, "value": v, "derived": d}
+                 for n, v, d in rows],
+    }
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    return path
+
+
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names")
-    args = ap.parse_args()
+    ap.add_argument("--list", action="store_true",
+                    help="print available suite names and exit")
+    ap.add_argument("--json", metavar="DIR", default=None,
+                    help="also write one BENCH_<suite>.json per suite")
+    args = ap.parse_args(argv)
+    if args.list:
+        print("\n".join(SUITES))
+        return
     names = list(SUITES) if not args.only else args.only.split(",")
+    sha = git_sha() if args.json else ""
 
     rows = []
     print("name,us_per_call,derived")
@@ -70,9 +119,12 @@ def main() -> None:
             SUITES[name](rows)
         except Exception as e:   # noqa: BLE001
             rows.append((f"{name}_ERROR", 0.0, repr(e)[:120]))
+        elapsed = time.time() - t0
         for r in rows[before:]:
             print(f"{r[0]},{r[1]:.4f},{r[2]}")
-        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+        if args.json:
+            write_json(Path(args.json), name, rows[before:], elapsed, sha)
+        print(f"# {name} done in {elapsed:.1f}s", file=sys.stderr)
 
 
 if __name__ == "__main__":

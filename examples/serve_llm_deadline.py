@@ -16,7 +16,7 @@ from repro.config import RunConfig, get_config, smoke_variant
 from repro.core.baselines import greedy_batching
 from repro.core.service import ServiceRequest
 from repro.models import api
-from repro.serving.engine import ServingEngine, TokenQuality
+from repro.serving.engine import ServingEngine
 
 
 def main():

@@ -8,7 +8,6 @@ checkpointing, and loss reporting.
 import argparse
 import time
 
-import jax
 
 from repro.config import RunConfig, get_config, smoke_variant
 from repro.training import checkpoint
@@ -46,8 +45,8 @@ def main():
 
     checkpoint.save(args.ckpt, {"params": params, "opt": opt_state})
     print(f"checkpoint written to {args.ckpt}")
-    restored = checkpoint.restore(args.ckpt, {"params": params,
-                                              "opt": opt_state})
+    checkpoint.restore(args.ckpt, {"params": params,
+                                   "opt": opt_state})
     print("checkpoint restore round-trip OK")
 
 

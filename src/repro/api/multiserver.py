@@ -1,0 +1,239 @@
+"""Multi-server front end: placement x per-cell provisioning.
+
+    from repro.api import MultiServerProvisioner
+    from repro.core.service import make_scenario
+
+    scn = make_scenario(K=12, n_servers=3,
+                        server_speed_range=(0.7, 1.3), seed=0)
+    multi = MultiServerProvisioner(scn, placement="greedy_fid",
+                                   scheduler="stacking",
+                                   allocator="inv_se").run()
+    print(multi.summary())
+
+``MultiServerProvisioner`` is ``Provisioner`` scaled out to M edge
+cells: a fifth registry of *placement* strategies decides which cell
+hosts each service, then every cell runs the familiar per-cell
+allocate -> plan -> simulate pipeline (on its own bandwidth budget and
+speed-scaled delay model).  ``run`` returns a ``MultiProvisionReport``
+bundling one ``ProvisionReport`` per non-empty server plus the merged
+per-service view; ``run_online`` is the event-driven counterpart
+(arrivals routed to a server at admission time, one plan track per
+cell — see ``repro.core.multiserver``).
+
+With ``n_servers == 1`` both paths reproduce the single-server
+``Provisioner`` / ``OnlineProvisioner`` results exactly
+(tests/test_multiserver.py enforces bit-equality).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.api.registry import (ADMISSIONS, ALLOCATORS, PLACEMENTS,
+                                SCHEDULERS, display_name)
+# entry modules populate the underlying registries on import
+from repro.api import allocators as _allocators   # noqa: F401
+from repro.api import placements as _placements   # noqa: F401
+from repro.api import schedulers as _schedulers   # noqa: F401
+from repro.api import online as _online           # noqa: F401
+from repro.api.provisioner import ProvisionReport
+from repro.core.delay_model import DelayModel
+from repro.core.multiserver import (MultiOnlineResult, MultiSimResult,
+                                    provision_multi, simulate_online_multi)
+from repro.core.quality_model import PowerLawFID, QualityModel
+from repro.core.service import Scenario
+from repro.core.simulator import SimResult
+
+
+@dataclasses.dataclass
+class MultiProvisionReport:
+    """Everything one multi-server round produced: the assignment, one
+    ``ProvisionReport`` per non-empty cell, and the merged view."""
+    scenario: Scenario
+    assignment: np.ndarray                 # server index per service
+    reports: List[ProvisionReport]         # one per non-empty server
+    server_ids: List[int]                  # reports[i] ran on server_ids[i]
+    sim: SimResult                         # merged, scenario order
+    placement_name: str = ""
+    scheduler_name: str = ""
+    allocator_name: str = ""
+
+    @property
+    def mean_fid(self) -> float:
+        return self.sim.mean_fid
+
+    @property
+    def outage_rate(self) -> float:
+        return self.sim.outage_rate
+
+    @property
+    def n_servers(self) -> int:
+        return self.scenario.n_servers
+
+    def report_for(self, server_id: int) -> Optional[ProvisionReport]:
+        for sid, rep in zip(self.server_ids, self.reports):
+            if sid == server_id:
+                return rep
+        return None
+
+    def summary(self) -> str:
+        counts = {sid: rep.scenario.K
+                  for sid, rep in zip(self.server_ids, self.reports)}
+        head = (f"[multi x{self.n_servers}] "
+                f"placement={self.placement_name} "
+                f"scheduler={self.scheduler_name} "
+                f"allocator={self.allocator_name} "
+                f"services/server={counts}")
+        return head + "\n" + self.sim.summary()
+
+
+@dataclasses.dataclass
+class MultiOnlineReport:
+    """Online multi-server run: outcomes + admission log + where every
+    admitted service ran."""
+    scenario: Scenario
+    result: MultiOnlineResult
+    placement_name: str = ""
+    scheduler_name: str = ""
+    allocator_name: str = ""
+    admission_name: str = ""
+
+    @property
+    def assignment(self) -> Dict[int, int]:
+        return self.result.assignment
+
+    @property
+    def mean_fid(self) -> float:
+        return self.result.mean_fid
+
+    @property
+    def outage_rate(self) -> float:
+        return self.result.outage_rate
+
+    @property
+    def reject_rate(self) -> float:
+        return self.result.reject_rate
+
+    def summary(self) -> str:
+        head = (f"[multi-online x{self.scenario.n_servers}] "
+                f"placement={self.placement_name} "
+                f"scheduler={self.scheduler_name} "
+                f"allocator={self.allocator_name} "
+                f"admission={self.admission_name}")
+        return head + "\n" + self.result.result.summary()
+
+
+class MultiServerProvisioner:
+    """Facade binding a (multi-server) scenario to one
+    (placement, scheduler, allocator) choice.  All three accept registry
+    names or protocol instances; ``placement_kwargs`` /
+    ``allocator_kwargs`` pass through to the underlying strategies.
+
+    The static ``run`` is analytic (allocation + plans + simulated
+    timelines); attach workloads per cell by feeding each
+    ``reports[i]`` sub-scenario to a ``Provisioner`` if execution on a
+    real model is needed.
+
+    The ``placement`` strategy is a *static* full-assignment solver and
+    applies to ``run`` only; ``run_online`` routes arrivals one at a
+    time with its own ``online_placement`` hook (default
+    earliest-free), since a static placement cannot see arrivals it
+    does not know about yet.
+    """
+
+    def __init__(self, scenario: Scenario, placement="least_loaded",
+                 scheduler="stacking", allocator="pso",
+                 delay: Optional[DelayModel] = None,
+                 quality: Optional[QualityModel] = None,
+                 placement_kwargs: Optional[dict] = None,
+                 allocator_kwargs: Optional[dict] = None):
+        self.scenario = scenario
+        self.placement_name = display_name(placement)
+        self.scheduler_name = display_name(scheduler)
+        self.allocator_name = display_name(allocator)
+        self.placement = PLACEMENTS.resolve(placement)
+        self.scheduler = SCHEDULERS.resolve(scheduler)
+        self.allocator = ALLOCATORS.resolve(allocator)
+        self.delay = delay if delay is not None else DelayModel()
+        self.quality = quality if quality is not None else PowerLawFID()
+        self.placement_kwargs = dict(placement_kwargs or {})
+        self.allocator_kwargs = dict(allocator_kwargs or {})
+
+    def _allocator(self):
+        if self.allocator_kwargs:
+            return functools.partial(self.allocator,
+                                     **self.allocator_kwargs)
+        return self.allocator
+
+    def place(self) -> np.ndarray:
+        """The placement stage alone: server index per service."""
+        return np.asarray(self.placement(
+            self.scenario, self.scheduler, self._allocator(), self.delay,
+            self.quality, **self.placement_kwargs))
+
+    def run(self, *, assignment=None,
+            validate: bool = True) -> MultiProvisionReport:
+        """Place -> per-cell allocate -> plan -> validate -> simulate.
+
+        ``assignment`` overrides the placement stage (a precomputed
+        server index per service), mirroring ``Provisioner.run``'s
+        compositionality.
+        """
+        if assignment is None:
+            assignment = self.place()
+        assignment = np.asarray(assignment)
+        multi: MultiSimResult = provision_multi(
+            self.scenario, assignment, self.scheduler, self._allocator(),
+            self.delay, self.quality, validate=validate)
+        reports, server_ids = [], []
+        for rep in multi.per_server:
+            reports.append(ProvisionReport(
+                scenario=rep.scenario, allocation=rep.allocation,
+                tau_prime=rep.tau_prime, plan=rep.plan, sim=rep.sim,
+                delay=rep.server.delay_model(self.delay),
+                quality=self.quality,
+                scheduler_name=self.scheduler_name,
+                allocator_name=self.allocator_name,
+                workload_name=f"server{rep.server.id}"))
+            server_ids.append(rep.server.id)
+        merged = SimResult(outcomes=multi.outcomes,
+                           mean_fid=multi.mean_fid,
+                           outage_rate=multi.outage_rate)
+        return MultiProvisionReport(
+            scenario=self.scenario, assignment=assignment,
+            reports=reports, server_ids=server_ids, sim=merged,
+            placement_name=self.placement_name,
+            scheduler_name=self.scheduler_name,
+            allocator_name=self.allocator_name)
+
+    def run_online(self, admission="admit_all", online_placement=None,
+                   admission_kwargs: Optional[dict] = None, *,
+                   validate: bool = True) -> MultiOnlineReport:
+        """Event-driven arrivals over the M cells.
+
+        ``online_placement`` is a per-arrival router
+        ``(svc, sim) -> server index`` (default: earliest-free cell;
+        ``repro.core.multiserver.best_projection`` trial-replans on
+        every cell).  The constructor's static ``placement`` does NOT
+        apply here — it solves a full assignment, which has no meaning
+        when requests are revealed one at a time.  ``admission`` takes
+        registry names or callables as in ``OnlineProvisioner``.
+        """
+        adm = ADMISSIONS.resolve(admission)
+        if admission_kwargs:
+            adm = functools.partial(adm, **admission_kwargs)
+        result = simulate_online_multi(
+            self.scenario, self.scheduler, self._allocator(),
+            delay=self.delay, quality=self.quality, admission=adm,
+            placement=online_placement, validate=validate)
+        return MultiOnlineReport(
+            scenario=self.scenario, result=result,
+            placement_name=(display_name(online_placement)
+                            if online_placement else "earliest_free"),
+            scheduler_name=self.scheduler_name,
+            allocator_name=self.allocator_name,
+            admission_name=display_name(admission))

@@ -1,10 +1,12 @@
 """String-keyed registries behind the provisioner API.
 
-Four registries — schedulers (P2 solvers), allocators (P1 solvers),
-workloads (step executors) and admissions (online accept/reject
-policies) — so every pipeline component is addressable by name
+Five registries — schedulers (P2 solvers), allocators (P1 solvers),
+workloads (step executors), admissions (online accept/reject policies)
+and placements (multi-server assignment strategies) — so every pipeline
+component is addressable by name
 (``Provisioner(scn, scheduler="stacking", allocator="pso")``,
-``OnlineProvisioner(scn, admission="deadline_feasible")``) and new
+``OnlineProvisioner(scn, admission="deadline_feasible")``,
+``MultiServerProvisioner(scn, placement="greedy_fid")``) and new
 variants plug in with a one-line decorator:
 
     @register_scheduler("my_sched")
@@ -66,6 +68,7 @@ SCHEDULERS = Registry("scheduler")
 ALLOCATORS = Registry("allocator")
 WORKLOADS = Registry("workload")
 ADMISSIONS = Registry("admission")
+PLACEMENTS = Registry("placement")
 
 
 def register_scheduler(name: str, obj: Any = None, **kw):
@@ -84,6 +87,10 @@ def register_admission(name: str, obj: Any = None, **kw):
     return ADMISSIONS.register(name, obj, **kw)
 
 
+def register_placement(name: str, obj: Any = None, **kw):
+    return PLACEMENTS.register(name, obj, **kw)
+
+
 def get_scheduler(name: str) -> Callable:
     return SCHEDULERS.get(name)
 
@@ -100,6 +107,10 @@ def get_admission(name: str) -> Callable:
     return ADMISSIONS.get(name)
 
 
+def get_placement(name: str) -> Callable:
+    return PLACEMENTS.get(name)
+
+
 def list_schedulers() -> List[str]:
     return SCHEDULERS.names()
 
@@ -114,3 +125,7 @@ def list_workloads() -> List[str]:
 
 def list_admissions() -> List[str]:
     return ADMISSIONS.names()
+
+
+def list_placements() -> List[str]:
+    return PLACEMENTS.names()

@@ -6,7 +6,7 @@ follow the DDPM/DDIM CIFAR-10 U-Net (~35M params); the `-smoke` variant is
 what CPU tests/benches instantiate.
 """
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Tuple
 
 

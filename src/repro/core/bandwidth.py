@@ -18,7 +18,7 @@ Beyond-paper additions (DESIGN.md §7):
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Sequence
+from typing import Callable, Dict
 
 import numpy as np
 

@@ -12,8 +12,7 @@ All share STACKING's time accounting so comparisons are apples-to-apples.
 
 from __future__ import annotations
 
-import math
-from typing import Dict, List, Sequence
+from typing import Dict, Sequence
 
 from repro.core.delay_model import DelayModel
 from repro.core.plan import BatchPlan

@@ -13,7 +13,7 @@ analytic TPU v5e counterpart from model size / FLOPs (DESIGN.md §3).
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence, Tuple
+from typing import Sequence
 
 import numpy as np
 

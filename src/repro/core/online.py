@@ -32,6 +32,11 @@ Replanning semantics (the residual scenario):
 The loop is pure numpy + stdlib and fully deterministic: identical
 scenarios, schedulers, allocators and admission policies yield identical
 event sequences (arrival ties break by service id).
+
+The per-server half of the loop (active plan, batch execution, residual
+replanning) lives in ``_ServerTrack`` so the multi-server simulator
+(``repro.core.multiserver``) can run one track per edge cell over the
+same event loop; ``OnlineSimulation`` is the single-track instance.
 """
 
 from __future__ import annotations
@@ -192,27 +197,37 @@ def _anchor(t0: float, plan: BatchPlan, res_scn: Scenario,
         last_batch_of=last)
 
 
-class OnlineSimulation:
-    """One event-driven run; ``simulate_online`` is the functional entry."""
+class _ServerTrack:
+    """The per-server half of the event loop: one server's active plan,
+    batch execution, and residual replanning.
 
-    def __init__(self, scn: Scenario, scheduler, allocator: AllocatorFn,
-                 delay: DelayModel, quality: QualityModel,
-                 admission: AdmissionFn, validate: bool = True):
+    ``states`` is the simulation-wide state dict (shared across tracks
+    in the multi-server case; each service only ever lives on one track,
+    recorded in ``owned``).  ``bandwidth_hz`` is this cell's own budget
+    and ``delay`` the delay model as seen on this server's hardware.
+    """
+
+    def __init__(self, scn: Scenario, bandwidth_hz: float, scheduler,
+                 allocator: AllocatorFn, delay: DelayModel,
+                 quality: QualityModel, states: Dict[int, _ServiceState],
+                 validate: bool = True):
         self.scn = scn
+        self.bandwidth_hz = bandwidth_hz
         self.scheduler = scheduler
         self.allocator = allocator
         self.delay = delay
         self.quality = quality
-        self.admission = admission
+        self.states = states
         self.validate = validate
 
-        self.states: Dict[int, _ServiceState] = {
-            s.id: _ServiceState(s) for s in scn.services}
+        self.owned: Set[int] = set()        # every id ever admitted here
         self.pending: Set[int] = set()      # admitted, generation incomplete
         self.active: Optional[_ActivePlan] = None
-        self.t_server_free = 0.0
-        self.decisions: List[AdmissionDecision] = []
+        self.t_free = 0.0
         self.replan_count = 0
+        # (t_start, service, cumulative step count) per executed task —
+        # the replan-invariant tests read this (steps must be contiguous)
+        self.executed_log: List[tuple] = []
 
     # -- event handlers --------------------------------------------------
 
@@ -224,7 +239,7 @@ class OnlineSimulation:
         st.tx_end = t + st.tx_dur
         self.pending.discard(st.svc.id)
 
-    def _execute_until(self, t_limit: float) -> None:
+    def execute_until(self, t_limit: float) -> None:
         """Run every batch whose start time precedes ``t_limit``.
 
         A batch is committed atomically at its start instant: once
@@ -244,12 +259,14 @@ class OnlineSimulation:
             for k, _ in batch:
                 st = self.states[k]
                 st.steps_done += 1
+                self.executed_log.append(
+                    (ap.t0 + starts[n], k, st.steps_done))
                 if n == ap.last_batch_of[k]:
                     self._complete_generation(st, end, ap.alloc[k])
-            self.t_server_free = max(self.t_server_free, end)
+            self.t_free = max(self.t_free, end)
             ap.next_batch += 1
 
-    def _residual_scenario(self, ids: Set[int], t_free: float) -> Scenario:
+    def residual_scenario(self, ids: Set[int], t_free: float) -> Scenario:
         """Live services with deadlines shrunk to the replan instant
         (kept in scenario order so an all-at-t=0 replan sees exactly the
         static scenario).
@@ -257,7 +274,7 @@ class OnlineSimulation:
         The bandwidth budget is only what is *uncommitted*: services
         whose content is still in the air at ``t_free`` keep the
         sub-band their adopting plan gave them, so the instantaneous sum
-        over concurrent transmissions never exceeds the shared channel
+        over concurrent transmissions never exceeds this cell's channel
         (inductively: each replan hands out at most the remainder).
         With no arrivals after t=0 nothing is ever in flight at replan
         time and the full budget is allocated, as in the static paper
@@ -269,17 +286,18 @@ class OnlineSimulation:
                 arrival=0.0)
             for s in self.scn.services if s.id in ids
         ]
-        B = self.scn.total_bandwidth_hz
+        B = self.bandwidth_hz
         reserved = sum(st.bandwidth for st in self.states.values()
-                       if st.gen_complete and st.tx_end > t_free)
+                       if st.svc.id in self.owned and st.gen_complete
+                       and st.tx_end > t_free)
         return Scenario(services=residual,
                         total_bandwidth_hz=max(B - reserved, 1e-6 * B),
                         content_bits=self.scn.content_bits)
 
-    def _replan(self, ids: Set[int], t_free: float) -> _ActivePlan:
+    def replan(self, ids: Set[int], t_free: float) -> _ActivePlan:
         """Allocate -> plan over the residual scenario, anchored at
-        ``t_free`` (the instant the server frees up)."""
-        res_scn = self._residual_scenario(ids, t_free)
+        ``t_free`` (the instant this server frees up)."""
+        res_scn = self.residual_scenario(ids, t_free)
         offsets = [self.states[s.id].steps_done for s in res_scn.services]
         scheduler, quality = self.scheduler, self.quality
         if any(offsets):
@@ -302,22 +320,13 @@ class OnlineSimulation:
         self.replan_count += 1
         return _anchor(t_free, plan, res_scn, alloc)
 
-    def _project(self, svc: ServiceRequest, trial: _ActivePlan
-                 ) -> ServiceOutcome:
-        """The outcome ``svc`` gets if the trial plan runs uninterrupted
-        — the evidence handed to the admission policy."""
-        T = trial.plan.steps_completed.get(svc.id, 0)
-        if T > 0:
-            gen_abs = trial.t0 + trial.plan.completion_time(svc.id)
-            gen = gen_abs - svc.arrival
-            tx = svc.tx_delay(trial.alloc[svc.id], self.scn.content_bits)
-        else:
-            gen = tx = 0.0
-        e2e = gen + tx
-        return ServiceOutcome(
-            id=svc.id, deadline=svc.deadline, steps=T, gen_delay=gen,
-            tx_delay=tx, e2e_delay=e2e, fid=self.quality.fid(T),
-            met_deadline=(T > 0 and e2e <= svc.deadline + _TIE))
+    def adopt(self, svc_id: int, trial: _ActivePlan) -> None:
+        """Accept an arrival: the trial plan replaces this track's
+        not-yet-started batches."""
+        self.owned.add(svc_id)
+        self.pending.add(svc_id)
+        self.active = trial
+        self._settle_no_step_services(trial)
 
     def _settle_no_step_services(self, ap: _ActivePlan) -> None:
         """A partially-generated service the new plan gives no further
@@ -327,58 +336,125 @@ class OnlineSimulation:
             if st.steps_done > 0 and ap.plan.steps_completed.get(k, 0) == 0:
                 self._complete_generation(st, ap.t0, ap.alloc[k])
 
+
+def _project(svc: ServiceRequest, trial: _ActivePlan,
+             quality: QualityModel, content_bits: float) -> ServiceOutcome:
+    """The outcome ``svc`` gets if the trial plan runs uninterrupted —
+    the evidence handed to the admission policy."""
+    T = trial.plan.steps_completed.get(svc.id, 0)
+    if T > 0:
+        gen_abs = trial.t0 + trial.plan.completion_time(svc.id)
+        gen = gen_abs - svc.arrival
+        tx = svc.tx_delay(trial.alloc[svc.id], content_bits)
+    else:
+        gen = tx = 0.0
+    e2e = gen + tx
+    return ServiceOutcome(
+        id=svc.id, deadline=svc.deadline, steps=T, gen_delay=gen,
+        tx_delay=tx, e2e_delay=e2e, fid=quality.fid(T),
+        met_deadline=(T > 0 and e2e <= svc.deadline + _TIE))
+
+
+def _collect_result(scn: Scenario, states: Dict[int, _ServiceState],
+                    decisions: List[AdmissionDecision],
+                    quality: QualityModel) -> OnlineResult:
+    """Final per-service outcomes + aggregates (shared by the single-
+    and multi-server simulators)."""
+    outcomes = []
+    for s in scn.services:
+        st = states[s.id]
+        if not st.admitted:
+            continue
+        T = st.steps_done
+        if st.gen_complete:
+            gen = st.gen_end - s.arrival
+            tx = st.tx_dur
+            e2e = gen + tx
+            met = T > 0 and e2e <= s.deadline + _TIE
+        else:
+            # never scheduled a single step (infeasible throughout):
+            # mirrors the static simulator's T == 0 outage row
+            gen = tx = e2e = 0.0
+            met = False
+        outcomes.append(ServiceOutcome(
+            id=s.id, deadline=s.deadline, steps=T, gen_delay=gen,
+            tx_delay=tx, e2e_delay=e2e, fid=quality.fid(T),
+            met_deadline=met))
+    mean_fid = float(np.mean([o.fid for o in outcomes])) \
+        if outcomes else float("nan")
+    outage = float(np.mean([0.0 if o.met_deadline else 1.0
+                            for o in outcomes])) if outcomes else 0.0
+    n = len(decisions)
+    rejected = sum(1 for d in decisions if not d.admitted)
+    return OnlineResult(outcomes=outcomes, decisions=decisions,
+                        mean_fid=mean_fid, outage_rate=outage,
+                        reject_rate=rejected / n if n else 0.0)
+
+
+class OnlineSimulation:
+    """One event-driven run; ``simulate_online`` is the functional entry.
+
+    A single ``_ServerTrack`` covering the whole scenario; the
+    multi-server sibling (``repro.core.multiserver``) runs one track per
+    edge cell over the same arrival loop."""
+
+    def __init__(self, scn: Scenario, scheduler, allocator: AllocatorFn,
+                 delay: DelayModel, quality: QualityModel,
+                 admission: AdmissionFn, validate: bool = True):
+        self.scn = scn
+        self.scheduler = scheduler
+        self.allocator = allocator
+        self.delay = delay
+        self.quality = quality
+        self.admission = admission
+        self.validate = validate
+
+        self.states: Dict[int, _ServiceState] = {
+            s.id: _ServiceState(s) for s in scn.services}
+        self.track = _ServerTrack(scn, scn.total_bandwidth_hz, scheduler,
+                                  allocator, delay, quality, self.states,
+                                  validate=validate)
+        self.decisions: List[AdmissionDecision] = []
+
+    # back-compat views onto the single track
+    @property
+    def pending(self) -> Set[int]:
+        return self.track.pending
+
+    @property
+    def active(self) -> Optional[_ActivePlan]:
+        return self.track.active
+
+    @property
+    def t_server_free(self) -> float:
+        return self.track.t_free
+
+    @property
+    def replan_count(self) -> int:
+        return self.track.replan_count
+
     # -- main loop -------------------------------------------------------
 
     def run(self) -> OnlineResult:
+        tr = self.track
         for svc in sorted(self.scn.services,
                           key=lambda s: (s.arrival, s.id)):
-            self._execute_until(svc.arrival)
-            t_free = max(svc.arrival, self.t_server_free)
-            trial = self._replan(self.pending | {svc.id}, t_free)
-            projected = self._project(svc, trial)
+            tr.execute_until(svc.arrival)
+            t_free = max(svc.arrival, tr.t_free)
+            trial = tr.replan(tr.pending | {svc.id}, t_free)
+            projected = _project(svc, trial, self.quality,
+                                 self.scn.content_bits)
             admit = bool(self.admission(svc, projected, self.states))
             self.states[svc.id].admitted = admit
             self.decisions.append(AdmissionDecision(
                 id=svc.id, arrival=svc.arrival, admitted=admit,
                 projected=projected))
             if admit:
-                self.pending.add(svc.id)
-                self.active = trial
-                self._settle_no_step_services(trial)
+                tr.adopt(svc.id, trial)
             # on reject the current plan keeps running untouched
-        self._execute_until(math.inf)
-        return self._result()
-
-    def _result(self) -> OnlineResult:
-        outcomes = []
-        for s in self.scn.services:
-            st = self.states[s.id]
-            if not st.admitted:
-                continue
-            T = st.steps_done
-            if st.gen_complete:
-                gen = st.gen_end - s.arrival
-                tx = st.tx_dur
-                e2e = gen + tx
-                met = T > 0 and e2e <= s.deadline + _TIE
-            else:
-                # never scheduled a single step (infeasible throughout):
-                # mirrors the static simulator's T == 0 outage row
-                gen = tx = e2e = 0.0
-                met = False
-            outcomes.append(ServiceOutcome(
-                id=s.id, deadline=s.deadline, steps=T, gen_delay=gen,
-                tx_delay=tx, e2e_delay=e2e, fid=self.quality.fid(T),
-                met_deadline=met))
-        mean_fid = float(np.mean([o.fid for o in outcomes])) \
-            if outcomes else float("nan")
-        outage = float(np.mean([0.0 if o.met_deadline else 1.0
-                                for o in outcomes])) if outcomes else 0.0
-        n = len(self.decisions)
-        rejected = sum(1 for d in self.decisions if not d.admitted)
-        return OnlineResult(outcomes=outcomes, decisions=self.decisions,
-                            mean_fid=mean_fid, outage_rate=outage,
-                            reject_rate=rejected / n if n else 0.0)
+        tr.execute_until(math.inf)
+        return _collect_result(self.scn, self.states, self.decisions,
+                               self.quality)
 
 
 def simulate_online(scn: Scenario, scheduler, allocator: AllocatorFn,

@@ -15,7 +15,7 @@ per-service generation deadline (14) — the property-based tests drive it.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Tuple
 
 from repro.core.delay_model import DelayModel
 

@@ -13,6 +13,11 @@ Beyond the paper's static batch (docs/SCENARIOS.md):
     into the *online* admission problem solved by ``repro.core.online``.
   * ``content_bits`` — optional per-service content size overriding the
     scenario-level value (heterogeneous outputs: thumbnails vs. 4K).
+  * ``servers`` — optional list of ``EdgeServer`` cells (per-server
+    compute speed, bandwidth budget, capacity) turning the single-server
+    problem into placement x per-cell allocation
+    (``repro.core.multiserver``).  ``None`` is the paper's one server
+    owning the whole budget.
 """
 
 from __future__ import annotations
@@ -21,6 +26,8 @@ import dataclasses
 from typing import List, Optional, Tuple
 
 import numpy as np
+
+from repro.core.delay_model import DelayModel
 
 DEFAULT_BANDWIDTH_HZ = 40_000.0
 DEFAULT_CONTENT_BITS = 3 * 1024 * 8.0
@@ -48,10 +55,35 @@ class ServiceRequest:
 
 
 @dataclasses.dataclass(frozen=True)
+class EdgeServer:
+    """One edge cell: its own compute speed, bandwidth budget and
+    (optional) capacity cap on how many services it may host.
+
+    ``speed`` is relative throughput (1.0 = the calibrated baseline
+    hardware): a server twice as fast halves every per-batch delay, so
+    the effective delay model scales both ``a`` and ``b`` by 1/speed.
+    """
+    id: int
+    bandwidth_hz: float = DEFAULT_BANDWIDTH_HZ   # the cell's own budget
+    speed: float = 1.0                           # relative compute speed
+    capacity: Optional[int] = None               # max services (None = inf)
+
+    def delay_model(self, base: DelayModel) -> DelayModel:
+        """The base delay model as seen on this server's hardware."""
+        if self.speed == 1.0:
+            return base
+        return DelayModel(a=base.a / self.speed, b=base.b / self.speed)
+
+    def has_room(self, n_assigned: int) -> bool:
+        return self.capacity is None or n_assigned < self.capacity
+
+
+@dataclasses.dataclass(frozen=True)
 class Scenario:
     services: List[ServiceRequest]
     total_bandwidth_hz: float = DEFAULT_BANDWIDTH_HZ
     content_bits: float = DEFAULT_CONTENT_BITS
+    servers: Optional[List[EdgeServer]] = None   # None = one implicit server
 
     @property
     def K(self) -> int:
@@ -62,6 +94,18 @@ class Scenario:
         """True when every request is present at t=0 (the paper's setting)."""
         return all(s.arrival == 0.0 for s in self.services)
 
+    @property
+    def n_servers(self) -> int:
+        return len(self.servers) if self.servers else 1
+
+    @property
+    def server_list(self) -> List[EdgeServer]:
+        """The effective cells: ``servers``, or the paper's single
+        implicit server owning the whole bandwidth budget."""
+        if self.servers:
+            return list(self.servers)
+        return [EdgeServer(id=0, bandwidth_hz=self.total_bandwidth_hz)]
+
 
 def make_scenario(K: int = 20, tau_min: float = 7.0, tau_max: float = 20.0,
                   eta_min: float = 5.0, eta_max: float = 10.0,
@@ -69,6 +113,9 @@ def make_scenario(K: int = 20, tau_min: float = 7.0, tau_max: float = 20.0,
                   content_bits: float = DEFAULT_CONTENT_BITS,
                   arrival_rate: Optional[float] = None,
                   content_bits_range: Optional[Tuple[float, float]] = None,
+                  n_servers: int = 1,
+                  server_speed_range: Optional[Tuple[float, float]] = None,
+                  server_capacity: Optional[int] = None,
                   seed: int = 0) -> Scenario:
     """Sample a K-service scenario (Sec. IV constants by default).
 
@@ -78,6 +125,22 @@ def make_scenario(K: int = 20, tau_min: float = 7.0, tau_max: float = 20.0,
         t=0 — the paper's static batch, bit-identical to older seeds.
     content_bits_range: (lo, hi) uniform per-service content sizes
         (heterogeneous outputs); ``None`` keeps the shared scenario size.
+    n_servers: number of edge cells; the total bandwidth is split
+        equally across cells.  ``1`` (default) keeps ``servers=None`` —
+        the paper's single-server scenario, bit-identical to older
+        seeds (and the multi-server pipeline on it reproduces the
+        single-server results exactly; tests/test_multiserver.py).
+    server_speed_range: (lo, hi) uniform per-server relative compute
+        speeds; ``None`` makes every server baseline speed (1.0).
+    server_capacity: per-server cap on hosted services (``None`` = no
+        cap); placements must respect it.
+
+    Per-server speed/capacity are honoured by the multi-server pipeline
+    (``MultiServerProvisioner`` / ``repro.core.multiserver``) — with
+    one explicit server included.  The paper's single-server
+    ``Provisioner`` / ``simulate_online`` never read ``servers``, so
+    passing speed/capacity while staying on the single-server path has
+    no effect there.
     """
     rng = np.random.default_rng(seed)
     services = [
@@ -101,6 +164,20 @@ def make_scenario(K: int = 20, tau_min: float = 7.0, tau_max: float = 20.0,
         bits = rng.uniform(lo, hi, size=K)
         services = [dataclasses.replace(s, content_bits=float(b))
                     for s, b in zip(services, bits)]
+    assert n_servers >= 1, "n_servers must be >= 1"
+    servers = None
+    if n_servers > 1 or server_speed_range is not None \
+            or server_capacity is not None:
+        speeds = np.ones(n_servers)
+        if server_speed_range is not None:
+            lo, hi = server_speed_range
+            speeds = rng.uniform(lo, hi, size=n_servers)
+        servers = [EdgeServer(id=m,
+                              bandwidth_hz=total_bandwidth_hz / n_servers,
+                              speed=float(speeds[m]),
+                              capacity=server_capacity)
+                   for m in range(n_servers)]
     return Scenario(services=services,
                     total_bandwidth_hz=total_bandwidth_hz,
-                    content_bits=content_bits)
+                    content_bits=content_bits,
+                    servers=servers)

@@ -10,7 +10,7 @@ policies read one schema."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import List
 
 import numpy as np
 

@@ -11,7 +11,6 @@ kernels/groupnorm_silu Pallas kernel targets on TPU.
 
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -2,7 +2,6 @@
 
 from __future__ import annotations
 
-import jax
 
 from repro.kernels import use_pallas
 from repro.kernels.rmsnorm.kernel import rmsnorm_pallas

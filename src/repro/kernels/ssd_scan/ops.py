@@ -4,7 +4,6 @@ from __future__ import annotations
 
 from repro.kernels import use_pallas
 from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
-from repro.kernels.ssd_scan.ref import ssd_scan_ref
 
 
 def ssd_scan(x, a, bmat, cmat, h0, *, chunk: int = 128):

@@ -14,7 +14,6 @@ import jax.numpy as jnp
 
 def ssd_scan_ref(x, a, bmat, cmat, h0):
     B, S, H, P = x.shape
-    N = bmat.shape[-1]
 
     def step(h, t):
         xt = x[:, t].astype(jnp.float32)             # (B,H,P)

@@ -6,12 +6,10 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as PS
 
 from repro.config import ModelConfig, RunConfig, ShapeConfig
 from repro.models import api
-from repro.models.params import param_pspecs
 
 
 def _ax(rules: dict, name: Optional[str]):

@@ -15,7 +15,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as PS
 
 from repro.config import RunConfig, get_config, sharding_rules_for, \

@@ -13,8 +13,6 @@ end-to-end step functions.
 
 from __future__ import annotations
 
-import types
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -8,8 +8,6 @@ Pallas kernel (kernels/flash_attention) which replaces it on real TPUs.
 
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models.params import P, constrain
+from repro.models.params import P
 from repro.models.layers import rmsnorm
 
 NEG_INF = -1e30

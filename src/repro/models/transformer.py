@@ -10,7 +10,6 @@ choice anyway.  The VLM variant scans over *groups* of
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -237,7 +236,6 @@ def forward(cfg: ModelConfig, params, tokens, run: RunConfig,
 
     if cfg.cross_attn_every:
         memory = extras["vision_embeds"].astype(x.dtype)
-        n_self = cfg.cross_attn_every - 1
 
         def group_body(carry, gp):
             x, aux = carry

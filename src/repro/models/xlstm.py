@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.params import P
-from repro.models.layers import rmsnorm, apply_norm, norm_schema
+from repro.models.layers import rmsnorm
 from repro.models.ssm import ssd_chunked
 
 

@@ -20,7 +20,7 @@ from repro.models.params import constrain
 from repro.models.transformer import stack_schema
 from repro.models.xlstm import (
     mlstm_forward, mlstm_init_state, mlstm_schema, mlstm_step,
-    slstm_forward, slstm_init_state, slstm_schema, slstm_step, mlstm_dims)
+    slstm_forward, slstm_init_state, slstm_schema, slstm_step)
 
 
 def _groups(cfg: ModelConfig) -> int:
@@ -93,7 +93,6 @@ def prefill(cfg: ModelConfig, params, tokens, max_len: int, run: RunConfig,
 
 def decode_step(cfg: ModelConfig, params, token, cache, run: RunConfig,
                 extras: Optional[dict] = None):
-    B = token.shape[0]
     x = embed(params["embed"], token)
 
     def group_body(x, xs):

@@ -151,7 +151,6 @@ def prefill(cfg: ModelConfig, params, tokens, max_len: int, run: RunConfig,
 
 def decode_step(cfg: ModelConfig, params, token, cache, run: RunConfig,
                 extras: Optional[dict] = None):
-    B = token.shape[0]
     pos = cache["pos"]
     x = embed(params["embed"], token)
     sp = params["shared"]

@@ -156,7 +156,6 @@ class ServingEngine:
         ``self.last_timings`` (Fig.-1a measurement during serving; the
         provisioner's calibrate->replan loop refits g(X) from these).
         """
-        key = sample_key if sample_key is not None else jax.random.PRNGKey(0)
         self.last_timings = []
         for batch in plan.batches:
             rids = [k for k, _ in batch]

@@ -11,7 +11,6 @@ from __future__ import annotations
 import os
 from typing import Any, Dict
 
-import jax
 import numpy as np
 
 

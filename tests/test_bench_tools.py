@@ -1,0 +1,167 @@
+"""Benchmark tooling (ISSUE 3 satellites): the --json artifact writer,
+the compare.py regression gate (must demonstrably fail on a synthetic
+regression), and the benchmarks package's src-path shim running from a
+clean subprocess with no PYTHONPATH."""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+if str(ROOT) not in sys.path:           # `benchmarks` lives at the root,
+    sys.path.insert(0, str(ROOT))       # not under pythonpath=src
+
+from benchmarks import compare, run as bench_run   # noqa: E402
+
+
+def _bench_file(tmp_path, suite, rows):
+    payload = {"suite": suite, "git_sha": "deadbeef", "elapsed_s": 0.1,
+               "rows": [{"name": n, "value": v, "derived": d}
+                        for n, v, d in rows]}
+    p = tmp_path / f"BENCH_{suite}.json"
+    p.write_text(json.dumps(payload))
+    return p
+
+
+BASELINE = {"metrics": {
+    "online_r0.5_stacking": {"value": 6.0, "kind": "lower_is_better",
+                             "rel_tol": 0.05},
+    "online_stacking_best": {"value": 1.0, "kind": "flag"},
+}}
+
+
+class TestCompareGate:
+    def test_passes_within_tolerance(self, tmp_path):
+        p = _bench_file(tmp_path, "online",
+                        [("online_r0.5_stacking", 6.2, ""),
+                         ("online_stacking_best", 1.0, "")])
+        assert compare.compare(BASELINE, compare.load_measured([p])) == []
+
+    def test_improvement_always_passes(self, tmp_path):
+        p = _bench_file(tmp_path, "online",
+                        [("online_r0.5_stacking", 1.0, ""),
+                         ("online_stacking_best", 1.0, "")])
+        assert compare.compare(BASELINE, compare.load_measured([p])) == []
+
+    def test_fid_regression_fails(self, tmp_path):
+        p = _bench_file(tmp_path, "online",
+                        [("online_r0.5_stacking", 6.5, ""),
+                         ("online_stacking_best", 1.0, "")])
+        findings = compare.compare(BASELINE, compare.load_measured([p]))
+        assert len(findings) == 1
+        assert "online_r0.5_stacking" in findings[0]
+
+    def test_flag_drop_fails(self, tmp_path):
+        p = _bench_file(tmp_path, "online",
+                        [("online_r0.5_stacking", 6.0, ""),
+                         ("online_stacking_best", 0.0, "")])
+        findings = compare.compare(BASELINE, compare.load_measured([p]))
+        assert len(findings) == 1
+        assert "flag dropped" in findings[0]
+
+    def test_missing_metric_fails(self, tmp_path):
+        p = _bench_file(tmp_path, "online",
+                        [("online_r0.5_stacking", 6.0, "")])
+        findings = compare.compare(BASELINE, compare.load_measured([p]))
+        assert any("missing" in f for f in findings)
+
+    def test_unknown_kind_fails(self):
+        base = {"metrics": {"x": {"value": 1.0, "kind": "sideways"}}}
+        assert compare.compare(base, {"x": 1.0})
+
+    def test_main_exit_codes(self, tmp_path):
+        base_path = tmp_path / "baseline.json"
+        base_path.write_text(json.dumps(BASELINE))
+        good = _bench_file(tmp_path, "good",
+                           [("online_r0.5_stacking", 6.0, ""),
+                            ("online_stacking_best", 1.0, "")])
+        assert compare.main([str(good),
+                             "--baseline", str(base_path)]) == 0
+        bad = _bench_file(tmp_path, "bad",
+                          [("online_r0.5_stacking", 99.0, ""),
+                           ("online_stacking_best", 1.0, "")])
+        assert compare.main([str(bad),
+                             "--baseline", str(base_path)]) == 1
+
+    def test_update_refreshes_values_keeping_specs(self, tmp_path):
+        base_path = tmp_path / "baseline.json"
+        base_path.write_text(json.dumps(BASELINE))
+        p = _bench_file(tmp_path, "online",
+                        [("online_r0.5_stacking", 4.2, ""),
+                         ("online_stacking_best", 1.0, "")])
+        assert compare.main([str(p), "--baseline", str(base_path),
+                             "--update"]) == 0
+        refreshed = json.loads(base_path.read_text())
+        m = refreshed["metrics"]["online_r0.5_stacking"]
+        assert m["value"] == 4.2
+        assert m["rel_tol"] == 0.05
+        assert m["kind"] == "lower_is_better"
+
+    def test_committed_baseline_gates_known_suites(self):
+        """The repo baseline must only gate metrics the CI bench job
+        actually produces (api, online, multiserver suites)."""
+        baseline = json.loads(
+            (ROOT / "benchmarks" / "baseline.json").read_text())
+        assert baseline["metrics"], "baseline must gate something"
+        for name, spec in baseline["metrics"].items():
+            assert name.split("_")[0] in ("online", "multiserver", "api")
+            assert spec["kind"] in ("flag", "lower_is_better")
+
+
+class TestJsonWriter:
+    def test_write_json_roundtrip(self, tmp_path):
+        path = bench_run.write_json(
+            tmp_path / "out", "demo",
+            [("a", 1.0, "x"), ("b", 2.5, "y")], 1.234, "cafebabe")
+        assert path.name == "BENCH_demo.json"
+        payload = json.loads(path.read_text())
+        assert payload["suite"] == "demo"
+        assert payload["git_sha"] == "cafebabe"
+        assert payload["elapsed_s"] == 1.234
+        assert payload["rows"][1] == {"name": "b", "value": 2.5,
+                                      "derived": "y"}
+
+    def test_git_sha_is_nonempty(self):
+        assert bench_run.git_sha()
+
+
+class TestBenchShim:
+    """The benchmarks/__init__.py src-path shim (ISSUE 3 satellite):
+    idempotent, and sufficient for a clean subprocess with no
+    PYTHONPATH."""
+
+    @pytest.fixture
+    def clean_env(self):
+        env = {k: v for k, v in os.environ.items()
+               if k not in ("PYTHONPATH",)}
+        env["JAX_PLATFORMS"] = "cpu"
+        return env
+
+    def test_run_list_from_clean_subprocess(self, clean_env):
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", "--list"],
+            cwd=ROOT, env=clean_env, capture_output=True, text=True,
+            timeout=120)
+        assert proc.returncode == 0, proc.stderr[-2000:]
+        suites = proc.stdout.split()
+        assert "multiserver" in suites
+        assert "online" in suites
+        assert "api" in suites
+
+    def test_shim_is_idempotent(self, clean_env):
+        src = ("import importlib, sys, benchmarks;"
+               "importlib.reload(benchmarks);"
+               "import benchmarks as b2;"
+               "src = [p for p in sys.path if p.rstrip('/').endswith('src')];"
+               "assert len(src) <= 1, sys.path;"
+               "import repro;"
+               "print('ok')")
+        proc = subprocess.run(
+            [sys.executable, "-c", src], cwd=ROOT, env=clean_env,
+            capture_output=True, text=True, timeout=120)
+        assert proc.returncode == 0, proc.stderr[-2000:]
+        assert proc.stdout.strip() == "ok"

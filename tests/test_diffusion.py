@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.ddim_cifar10 import SMOKE, UNetConfig
+from repro.configs.ddim_cifar10 import SMOKE
 from repro.core.delay_model import DelayModel
 from repro.core.quality_model import PowerLawFID
 from repro.core.service import make_scenario

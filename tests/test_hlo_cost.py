@@ -77,7 +77,6 @@ def test_dus_counts_slice_not_buffer():
 
 
 def test_collectives_counted_through_loops():
-    import os
     # needs >1 device; skip if the test process pinned to 1
     if len(jax.devices()) < 2:
         pytest.skip("single device")

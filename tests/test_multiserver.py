@@ -1,0 +1,337 @@
+"""Multi-server provisioning (ISSUE 3 tentpole): scenario sampling,
+single-server bit-equivalence, placements, capacity, and the per-cell
+bandwidth invariant."""
+
+import numpy as np
+import pytest
+
+from repro.api import (MultiServerProvisioner, OnlineProvisioner,
+                       PLACEMENTS, Provisioner, get_allocator,
+                       get_placement, get_scheduler, list_placements)
+from repro.core.delay_model import DelayModel
+from repro.core.multiserver import (MultiOnlineSimulation, best_projection,
+                                    cell_objective, provision_multi,
+                                    simulate_online_multi, split_scenario)
+from repro.core.quality_model import PowerLawFID
+from repro.core.service import (EdgeServer, Scenario, ServiceRequest,
+                                make_scenario)
+
+DELAY = DelayModel()
+QUALITY = PowerLawFID()
+
+
+class TestScenarioSampling:
+    def test_default_is_single_server_and_bit_identical(self):
+        base = make_scenario(K=10, seed=4)
+        assert base.servers is None
+        assert base.n_servers == 1
+        multi = make_scenario(K=10, n_servers=3, seed=4)
+        for a, b in zip(base.services, multi.services):
+            assert a.deadline == b.deadline
+            assert a.spectral_eff == b.spectral_eff
+
+    def test_servers_split_bandwidth_equally(self):
+        scn = make_scenario(K=6, n_servers=4, seed=0)
+        assert scn.n_servers == 4
+        assert all(s.bandwidth_hz ==
+                   pytest.approx(scn.total_bandwidth_hz / 4)
+                   for s in scn.server_list)
+        assert all(s.speed == 1.0 for s in scn.server_list)
+
+    def test_speed_range_sampled_after_base_draws(self):
+        plain = make_scenario(K=6, n_servers=3, seed=7)
+        fast = make_scenario(K=6, n_servers=3,
+                             server_speed_range=(0.5, 2.0), seed=7)
+        for a, b in zip(plain.services, fast.services):
+            assert a.deadline == b.deadline
+        assert all(0.5 <= s.speed <= 2.0 for s in fast.server_list)
+        assert len({s.speed for s in fast.server_list}) > 1
+
+    def test_server_delay_model_scales_with_speed(self):
+        sv = EdgeServer(id=0, bandwidth_hz=1e4, speed=2.0)
+        d = sv.delay_model(DELAY)
+        assert d.a == pytest.approx(DELAY.a / 2.0)
+        assert d.b == pytest.approx(DELAY.b / 2.0)
+        assert sv.delay_model(DELAY).g(4) == pytest.approx(DELAY.g(4) / 2)
+        one = EdgeServer(id=1, bandwidth_hz=1e4)
+        assert one.delay_model(DELAY) is DELAY
+
+    def test_implicit_server_owns_whole_budget(self):
+        scn = make_scenario(K=4, seed=0)
+        (srv,) = scn.server_list
+        assert srv.bandwidth_hz == scn.total_bandwidth_hz
+
+    def test_invalid_n_servers_rejected(self):
+        with pytest.raises(AssertionError, match="n_servers"):
+            make_scenario(K=4, n_servers=0)
+
+
+class TestSplitScenario:
+    def test_partition_preserves_order_and_budget(self):
+        scn = make_scenario(K=9, n_servers=3, seed=1)
+        assignment = [i % 3 for i in range(9)]
+        subs = split_scenario(scn, assignment)
+        assert sum(sub.K for sub in subs) == 9
+        for m, sub in enumerate(subs):
+            assert [s.id for s in sub.services] == \
+                [s.id for s, a in zip(scn.services, assignment) if a == m]
+            assert sub.total_bandwidth_hz == \
+                pytest.approx(scn.server_list[m].bandwidth_hz)
+
+    def test_capacity_violation_raises(self):
+        scn = make_scenario(K=4, n_servers=2, server_capacity=2, seed=0)
+        with pytest.raises(AssertionError, match="capacity"):
+            split_scenario(scn, [0, 0, 0, 1])
+
+    def test_unknown_server_raises(self):
+        scn = make_scenario(K=2, n_servers=2, seed=0)
+        with pytest.raises(AssertionError):
+            split_scenario(scn, [0, 5])
+
+
+class TestSingleServerEquivalence:
+    """The acceptance bar: n_servers=1 through the multi-server pipeline
+    reproduces the single-server results exactly."""
+
+    @pytest.mark.parametrize("scheduler", ["stacking", "greedy",
+                                           "equal_steps"])
+    @pytest.mark.parametrize("allocator", ["inv_se", "equal"])
+    def test_static_pipeline_matches_provisioner(self, scheduler,
+                                                 allocator):
+        scn = make_scenario(K=8, seed=3)
+        single = Provisioner(scn, scheduler=scheduler,
+                             allocator=allocator).run()
+        multi = MultiServerProvisioner(scn, placement="round_robin",
+                                       scheduler=scheduler,
+                                       allocator=allocator).run()
+        assert multi.sim.outcomes == single.sim.outcomes
+        assert multi.mean_fid == single.mean_fid
+        assert multi.outage_rate == single.outage_rate
+        assert list(multi.assignment) == [0] * scn.K
+        assert len(multi.reports) == 1
+        np.testing.assert_array_equal(multi.reports[0].allocation,
+                                      single.allocation)
+
+    @pytest.mark.parametrize("placement", ["round_robin", "least_loaded",
+                                           "greedy_fid", "alternating"])
+    def test_every_placement_degenerates_on_one_server(self, placement):
+        scn = make_scenario(K=6, seed=5)
+        single = Provisioner(scn, scheduler="stacking",
+                             allocator="inv_se").run()
+        multi = MultiServerProvisioner(scn, placement=placement,
+                                       scheduler="stacking",
+                                       allocator="inv_se").run()
+        assert multi.sim.outcomes == single.sim.outcomes
+
+    def test_online_matches_simulate_online(self):
+        scn = make_scenario(K=8, arrival_rate=0.5, seed=3)
+        single = OnlineProvisioner(scn, scheduler="stacking",
+                                   allocator="inv_se").run()
+        multi = simulate_online_multi(scn, get_scheduler("stacking"),
+                                      get_allocator("inv_se"),
+                                      DELAY, QUALITY)
+        assert multi.result.outcomes == single.result.outcomes
+        assert multi.assignment == {o.id: 0
+                                    for o in single.result.outcomes}
+
+    def test_online_all_arrivals_at_zero_matches_static_simulate(self):
+        """Extends the PR 2 equivalence test to the multi-server path:
+        one server + all arrivals at t=0 == the static pipeline."""
+        scn = make_scenario(K=8, seed=6)
+        assert scn.is_static
+        static = Provisioner(scn, scheduler="stacking",
+                             allocator="inv_se").run()
+        multi = simulate_online_multi(scn, get_scheduler("stacking"),
+                                      get_allocator("inv_se"),
+                                      DELAY, QUALITY)
+        assert multi.result.outcomes == static.sim.outcomes
+
+
+class TestPlacements:
+    def test_registry_entries_present(self):
+        for name in ("round_robin", "least_loaded", "greedy_fid",
+                     "alternating"):
+            assert name in PLACEMENTS
+        assert "rr" in PLACEMENTS                  # alias
+        assert list_placements() == sorted(list_placements())
+
+    def test_unknown_name_raises_with_candidates(self):
+        with pytest.raises(KeyError, match="unknown placement"):
+            get_placement("teleport")
+
+    def test_round_robin_cycles(self):
+        scn = make_scenario(K=7, n_servers=3, seed=0)
+        out = get_placement("round_robin")(scn)
+        assert list(out) == [0, 1, 2, 0, 1, 2, 0]
+
+    def test_least_loaded_prefers_fast_servers(self):
+        scn = Scenario(
+            services=[ServiceRequest(id=k, deadline=10.0,
+                                     spectral_eff=7.0) for k in range(4)],
+            servers=[EdgeServer(id=0, bandwidth_hz=2e4, speed=1.0),
+                     EdgeServer(id=1, bandwidth_hz=2e4, speed=3.0)])
+        out = get_placement("least_loaded")(scn)
+        # the 3x server absorbs three services per one on the baseline
+        assert list(out).count(1) == 3
+
+    @pytest.mark.parametrize("placement", ["round_robin", "least_loaded",
+                                           "greedy_fid"])
+    def test_capacity_respected(self, placement):
+        scn = make_scenario(K=6, n_servers=3, server_capacity=2, seed=2)
+        out = get_placement(placement)(
+            scn, get_scheduler("stacking"), get_allocator("inv_se"),
+            DELAY, QUALITY)
+        counts = np.bincount(np.asarray(out), minlength=3)
+        assert counts.max() <= 2
+
+    def test_insufficient_capacity_raises(self):
+        scn = make_scenario(K=6, n_servers=2, server_capacity=2, seed=0)
+        with pytest.raises(AssertionError, match="capacities"):
+            get_placement("round_robin")(scn)
+
+    def test_greedy_fid_no_worse_than_round_robin(self):
+        """The benchmark ordering claim, pinned as a unit test on a
+        heterogeneous scenario."""
+        scn = make_scenario(K=9, n_servers=3,
+                            server_speed_range=(0.6, 1.4), seed=0)
+        sched, alloc = get_scheduler("stacking"), get_allocator("inv_se")
+        fids = {}
+        for placement in ("round_robin", "greedy_fid"):
+            a = get_placement(placement)(scn, sched, alloc, DELAY,
+                                         QUALITY)
+            fids[placement] = provision_multi(scn, a, sched, alloc,
+                                              DELAY, QUALITY).mean_fid
+        assert fids["greedy_fid"] <= fids["round_robin"] + 1e-9
+
+    def test_alternating_no_worse_than_its_init(self):
+        scn = make_scenario(K=6, n_servers=2,
+                            server_speed_range=(0.5, 1.5), seed=1)
+        sched, alloc = get_scheduler("stacking"), get_allocator("inv_se")
+        init = get_placement("least_loaded")(scn, sched, alloc, DELAY,
+                                             QUALITY)
+        out = get_placement("alternating")(scn, sched, alloc, DELAY,
+                                           QUALITY, sweeps=1)
+        f_init = provision_multi(scn, init, sched, alloc, DELAY,
+                                 QUALITY).mean_fid
+        f_alt = provision_multi(scn, out, sched, alloc, DELAY,
+                                QUALITY).mean_fid
+        assert f_alt <= f_init + 1e-9
+
+
+class TestMultiProvisionReport:
+    def test_per_server_bundle_is_consistent(self):
+        scn = make_scenario(K=9, n_servers=3,
+                            server_speed_range=(0.7, 1.3), seed=0)
+        rep = MultiServerProvisioner(scn, placement="least_loaded",
+                                     scheduler="stacking",
+                                     allocator="inv_se").run()
+        assert len(rep.sim.outcomes) == 9
+        assert sorted(o.id for o in rep.sim.outcomes) == list(range(9))
+        assert sum(r.scenario.K for r in rep.reports) == 9
+        for sid, sub in zip(rep.server_ids, rep.reports):
+            server = scn.server_list[sid]
+            # each cell's allocation sums to its own budget
+            assert sub.allocation.sum() == \
+                pytest.approx(server.bandwidth_hz)
+            # and plans with the cell's speed-scaled delay model
+            assert sub.delay == server.delay_model(DELAY)
+            assert rep.report_for(sid) is sub
+        assert rep.report_for(99) is None
+        assert "placement=least_loaded" in rep.summary()
+
+    def test_explicit_assignment_overrides_placement(self):
+        scn = make_scenario(K=4, n_servers=2, seed=0)
+        rep = MultiServerProvisioner(scn, placement="least_loaded",
+                                     scheduler="greedy",
+                                     allocator="equal").run(
+                                         assignment=[1, 1, 1, 1])
+        assert rep.server_ids == [1]
+        assert rep.reports[0].scenario.K == 4
+
+    def test_cell_objective_empty_is_zero(self):
+        empty = Scenario(services=[], total_bandwidth_hz=1e4)
+        assert cell_objective(empty, get_scheduler("greedy"),
+                              get_allocator("equal"), DELAY,
+                              QUALITY) == 0.0
+
+
+class TestMultiOnline:
+    def test_arrivals_route_across_cells(self):
+        scn = make_scenario(K=12, n_servers=3, arrival_rate=2.0, seed=0)
+        rep = MultiServerProvisioner(scn, scheduler="stacking",
+                                     allocator="inv_se").run_online()
+        assert len(rep.result.outcomes) == 12
+        assert set(rep.assignment.values()) == {0, 1, 2}
+        assert rep.reject_rate == 0.0
+
+    def test_capacity_respected_online(self):
+        scn = make_scenario(K=6, n_servers=3, server_capacity=2,
+                            arrival_rate=1.0, seed=1)
+        sim = MultiOnlineSimulation(scn, get_scheduler("greedy"),
+                                    get_allocator("equal"), DELAY,
+                                    QUALITY, admission=lambda *a: True)
+        res = sim.run()
+        counts = {}
+        for m in res.assignment.values():
+            counts[m] = counts.get(m, 0) + 1
+        assert max(counts.values()) <= 2
+
+    def test_full_cluster_force_rejects_arrivals(self):
+        """Capacity is hard online: once every cell hosts its cap, the
+        remaining arrivals are rejected even under admit_all — never
+        silently oversubscribed (the static path asserts instead)."""
+        scn = make_scenario(K=10, n_servers=2, server_capacity=3,
+                            arrival_rate=1.0, seed=0)
+        sim = MultiOnlineSimulation(scn, get_scheduler("greedy"),
+                                    get_allocator("equal"), DELAY,
+                                    QUALITY, admission=lambda *a: True)
+        res = sim.run()
+        assert len(res.assignment) == 6          # 2 cells x capacity 3
+        assert res.reject_rate == pytest.approx(0.4)
+        for m in (0, 1):
+            hosted = sum(1 for v in res.assignment.values() if v == m)
+            assert hosted <= 3
+        # the rejected four are the latest arrivals, with outage rows
+        rejected = [d for d in res.result.decisions if not d.admitted]
+        assert len(rejected) == 4
+        assert all(d.projected.steps == 0 for d in rejected)
+
+    def test_custom_placement_cannot_oversubscribe(self):
+        scn = make_scenario(K=4, n_servers=2, server_capacity=1,
+                            arrival_rate=1.0, seed=2)
+        sim = MultiOnlineSimulation(scn, get_scheduler("greedy"),
+                                    get_allocator("equal"), DELAY,
+                                    QUALITY, admission=lambda *a: True,
+                                    placement=lambda svc, s: 0)
+        res = sim.run()
+        assert list(res.assignment.values()) == [0]   # cap 1 on cell 0
+        assert res.reject_rate == pytest.approx(0.75)
+
+    def test_best_projection_no_worse_than_earliest_free(self):
+        scn = make_scenario(K=10, n_servers=3, arrival_rate=1.5,
+                            server_speed_range=(0.5, 1.5), seed=2)
+        free = simulate_online_multi(scn, get_scheduler("stacking"),
+                                     get_allocator("inv_se"), DELAY,
+                                     QUALITY)
+        best = simulate_online_multi(scn, get_scheduler("stacking"),
+                                     get_allocator("inv_se"), DELAY,
+                                     QUALITY, placement=best_projection)
+        assert best.mean_fid <= free.mean_fid + 1e-9
+
+    def test_per_cell_transmissions_never_exceed_cell_budget(self):
+        """The P1 constraint holds per cell at every instant: replans on
+        one server only hand out that cell's uncommitted bandwidth."""
+        scn = make_scenario(K=12, n_servers=2, tau_min=1.0, tau_max=3.0,
+                            arrival_rate=4.0, seed=0,
+                            content_bits_range=(65536.0, 262144.0))
+        sim = MultiOnlineSimulation(scn, get_scheduler("stacking"),
+                                    get_allocator("inv_se"), DELAY,
+                                    QUALITY, admission=lambda *a: True)
+        res = sim.run()
+        for m, server in enumerate(scn.server_list):
+            spans = [(st.gen_end, st.tx_end, st.bandwidth)
+                     for sid, st in sim.states.items()
+                     if st.gen_complete and res.assignment.get(sid) == m]
+            for t0, _, _ in spans:
+                in_air = sum(bw for s, e, bw in spans if s <= t0 < e)
+                assert in_air <= server.bandwidth_hz + 1e-6

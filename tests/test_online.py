@@ -2,7 +2,6 @@
 admission-policy invariants, Poisson arrivals and heterogeneous content
 sizes (ISSUE: tentpole test coverage)."""
 
-import dataclasses
 
 import numpy as np
 import pytest

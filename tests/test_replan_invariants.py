@@ -1,0 +1,176 @@
+"""Property-style replan invariants (ISSUE 3 satellite): across seeds,
+schedulers and allocators, online replanning must never double-execute
+or resurrect work, never oversubscribe a (per-cell) bandwidth budget,
+and must degenerate to the static pipeline when nothing is online."""
+
+import pytest
+
+from repro.api import Provisioner, get_allocator, get_scheduler
+from repro.core.delay_model import DelayModel
+from repro.core.multiserver import MultiOnlineSimulation
+from repro.core.online import OnlineSimulation
+from repro.core.quality_model import PowerLawFID
+from repro.core.service import make_scenario
+
+DELAY = DelayModel()
+QUALITY = PowerLawFID()
+
+CASES = [("stacking", "inv_se", 0), ("stacking", "coordinate", 1),
+         ("greedy", "equal", 2), ("equal_steps", "inv_se", 3),
+         ("stacking", "inv_se", 4)]
+
+
+def _run_online(scheduler, allocator, seed, **scn_kw):
+    scn = make_scenario(arrival_rate=1.0, seed=seed, **scn_kw)
+    sim = OnlineSimulation(scn, get_scheduler(scheduler),
+                           get_allocator(allocator), DELAY, QUALITY,
+                           admission=lambda *a: True)
+    res = sim.run()
+    return scn, sim, res
+
+
+class TestNoResurrection:
+    """A replan schedules *additional* steps: the executed-step log per
+    service must be exactly 1, 2, ..., T with strictly increasing start
+    times — a preempted (replaced-before-start) batch never runs, and
+    no step is ever counted twice."""
+
+    @pytest.mark.parametrize("scheduler,allocator,seed", CASES)
+    def test_steps_contiguous_and_monotone(self, scheduler, allocator,
+                                           seed):
+        _, sim, res = _run_online(scheduler, allocator, seed, K=10,
+                                  tau_min=2.0, tau_max=6.0)
+        per_svc = {}
+        for t_start, k, cum in sim.track.executed_log:
+            per_svc.setdefault(k, []).append((t_start, cum))
+        for k, entries in per_svc.items():
+            counts = [c for _, c in entries]
+            assert counts == list(range(1, len(counts) + 1)), \
+                f"service {k} steps not contiguous: {counts}"
+            starts = [t for t, _ in entries]
+            assert all(b >= a - 1e-12
+                       for a, b in zip(starts, starts[1:]))
+        # the log and the final outcomes agree on totals
+        by_id = {o.id: o for o in res.outcomes}
+        for k, entries in per_svc.items():
+            assert by_id[k].steps == len(entries)
+
+    @pytest.mark.parametrize("scheduler,allocator,seed", CASES)
+    def test_batch_starts_monotone_within_track(self, scheduler,
+                                                allocator, seed):
+        """The server executes one batch at a time: distinct start times
+        never interleave backwards (an adopted replan can only append
+        *after* everything already run)."""
+        _, sim, _ = _run_online(scheduler, allocator, seed, K=8,
+                                tau_min=2.0, tau_max=5.0)
+        starts = [t for t, _, _ in sim.track.executed_log]
+        assert all(b >= a - 1e-12 for a, b in zip(starts, starts[1:]))
+
+
+class TestBudgetNeverExceeded:
+    """After any chain of replans (including coordinate_refine moving
+    bandwidth between services), concurrent transmissions never sum past
+    the channel budget — per cell in the multi-server case."""
+
+    @pytest.mark.parametrize("allocator", ["inv_se", "coordinate"])
+    def test_single_server_concurrent_tx_within_budget(self, allocator):
+        scn, sim, _ = _run_online("stacking", allocator, 0, K=12,
+                                  tau_min=1.0, tau_max=3.0,
+                                  content_bits_range=(65536.0, 262144.0))
+        spans = [(st.gen_end, st.tx_end, st.bandwidth)
+                 for st in sim.states.values() if st.gen_complete]
+        for t0, _, _ in spans:
+            in_air = sum(bw for s, e, bw in spans if s <= t0 < e)
+            assert in_air <= scn.total_bandwidth_hz + 1e-6
+
+    @pytest.mark.parametrize("allocator", ["inv_se", "coordinate"])
+    def test_per_cell_tx_within_cell_budget(self, allocator):
+        scn = make_scenario(K=10, n_servers=2, tau_min=1.0, tau_max=3.0,
+                            arrival_rate=3.0, seed=1,
+                            content_bits_range=(65536.0, 262144.0))
+        sim = MultiOnlineSimulation(scn, get_scheduler("stacking"),
+                                    get_allocator(allocator), DELAY,
+                                    QUALITY, admission=lambda *a: True)
+        res = sim.run()
+        for m, server in enumerate(scn.server_list):
+            spans = [(st.gen_end, st.tx_end, st.bandwidth)
+                     for sid, st in sim.states.items()
+                     if st.gen_complete and res.assignment.get(sid) == m]
+            for t0, _, _ in spans:
+                in_air = sum(bw for s, e, bw in spans if s <= t0 < e)
+                assert in_air <= server.bandwidth_hz + 1e-6
+
+    @pytest.mark.parametrize("allocator", ["inv_se", "coordinate"])
+    def test_every_adopted_allocation_sums_to_residual_budget(
+            self, allocator):
+        """Each replan's allocation hands out at most the uncommitted
+        bandwidth (checked indirectly: the winning transmission
+        bandwidths are positive and individually within budget)."""
+        scn, sim, res = _run_online("stacking", allocator, 2, K=10,
+                                    tau_min=1.0, tau_max=4.0)
+        for o in res.outcomes:
+            if o.steps > 0:
+                st = sim.states[o.id]
+                assert 0.0 < st.bandwidth <= scn.total_bandwidth_hz + 1e-6
+
+
+class TestStaticDegeneration:
+    """With every arrival at t=0 the event loop must reproduce the
+    static pipeline exactly — single- and multi-server alike."""
+
+    @pytest.mark.parametrize("scheduler,allocator,seed",
+                             [("stacking", "inv_se", 0),
+                              ("stacking", "coordinate", 1),
+                              ("greedy", "equal", 2)])
+    def test_online_equals_static_when_all_at_zero(self, scheduler,
+                                                   allocator, seed):
+        scn = make_scenario(K=8, seed=seed)
+        static = Provisioner(scn, scheduler=scheduler,
+                             allocator=allocator).run()
+        sim = OnlineSimulation(scn, get_scheduler(scheduler),
+                               get_allocator(allocator), DELAY, QUALITY,
+                               admission=lambda *a: True)
+        assert sim.run().outcomes == static.sim.outcomes
+        msim = MultiOnlineSimulation(scn, get_scheduler(scheduler),
+                                     get_allocator(allocator), DELAY,
+                                     QUALITY, admission=lambda *a: True)
+        assert msim.run().result.outcomes == static.sim.outcomes
+
+    def test_multi_online_is_deterministic(self):
+        scn = make_scenario(K=10, n_servers=3, arrival_rate=1.0,
+                            server_speed_range=(0.6, 1.4), seed=5)
+        runs = []
+        for _ in range(2):
+            sim = MultiOnlineSimulation(
+                scn, get_scheduler("stacking"), get_allocator("inv_se"),
+                DELAY, QUALITY, admission=lambda *a: True)
+            runs.append(sim.run())
+        assert runs[0].result.outcomes == runs[1].result.outcomes
+        assert runs[0].assignment == runs[1].assignment
+
+
+class TestExecutedLogConsistency:
+    def test_steps_done_equals_log_length_multi(self):
+        scn = make_scenario(K=9, n_servers=3, arrival_rate=2.0, seed=3)
+        sim = MultiOnlineSimulation(scn, get_scheduler("stacking"),
+                                    get_allocator("inv_se"), DELAY,
+                                    QUALITY, admission=lambda *a: True)
+        sim.run()
+        logged = {}
+        for tr in sim.tracks:
+            for _, k, _ in tr.executed_log:
+                logged[k] = logged.get(k, 0) + 1
+        for k, st in sim.states.items():
+            assert st.steps_done == logged.get(k, 0)
+
+    def test_services_never_execute_on_two_tracks(self):
+        scn = make_scenario(K=9, n_servers=3, arrival_rate=2.0, seed=4)
+        sim = MultiOnlineSimulation(scn, get_scheduler("stacking"),
+                                    get_allocator("inv_se"), DELAY,
+                                    QUALITY, admission=lambda *a: True)
+        sim.run()
+        seen = {}
+        for m, tr in enumerate(sim.tracks):
+            for _, k, _ in tr.executed_log:
+                assert seen.setdefault(k, m) == m, \
+                    f"service {k} ran on tracks {seen[k]} and {m}"

@@ -2,7 +2,6 @@
 end-to-end simulator tests."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

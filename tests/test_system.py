@@ -2,8 +2,6 @@
 generation+transmission pipeline, plan->executor consistency, and the
 dry-run path on the real (single) device."""
 
-import subprocess
-import sys
 
 import jax
 import numpy as np
