@@ -22,9 +22,18 @@ that regresses the scheduler-vs-baseline numbers fails visibly.
     pinned at 1.0 must stay 1.0).
 
 A gated metric missing from the measured rows fails too — a suite that
-silently stops emitting its numbers is itself a regression.
+silently stops emitting its numbers is itself a regression.  The
+baseline may additionally list ``required_suites``: every named suite
+must appear among the BENCH_*.json files given, so dropping a suite
+from the CI invocation (which would also sidestep its gated metrics if
+they were ever pruned from the baseline) fails loudly.
 ``--update`` rewrites the baseline's values from the measured rows
-(gate specs are kept), for refreshing after an intentional change.
+(gate specs and the required_suites list are kept), for refreshing
+after an intentional change; it refuses when a required suite or any
+gated metric is missing from the measurement (a crashed suite still
+writes its BENCH json, but only with an ``<suite>_ERROR`` row), so a
+partial run can never produce a "refreshed" baseline that silently
+keeps stale values.
 """
 
 import argparse
@@ -45,6 +54,20 @@ def load_measured(paths) -> Dict[str, float]:
         for row in payload.get("rows", []):
             measured[row["name"]] = float(row["value"])
     return measured
+
+
+def load_suites(paths) -> set:
+    """The suite names covered by the given BENCH_*.json files."""
+    return {json.loads(Path(p).read_text()).get("suite") for p in paths}
+
+
+def check_suites(baseline: dict, suites: set) -> List[str]:
+    """Findings for baseline-required suites absent from the measured
+    files (empty = pass)."""
+    return [f"required suite '{s}' has no BENCH_*.json among the "
+            f"measured files"
+            for s in baseline.get("required_suites", [])
+            if s not in suites]
 
 
 def compare(baseline: dict, measured: Dict[str, float]) -> List[str]:
@@ -77,13 +100,16 @@ def compare(baseline: dict, measured: Dict[str, float]) -> List[str]:
 
 def update_baseline(baseline: dict,
                     measured: Dict[str, float]) -> dict:
-    """Refresh gate values from measured rows, keeping specs."""
+    """Refresh gate values from measured rows, keeping specs (and any
+    required_suites list)."""
     out = {"metrics": {}}
     for name, spec in baseline.get("metrics", {}).items():
         new = dict(spec)
         if name in measured:
             new["value"] = measured[name]
         out["metrics"][name] = new
+    if "required_suites" in baseline:
+        out["required_suites"] = baseline["required_suites"]
     return out
 
 
@@ -98,15 +124,31 @@ def main(argv=None) -> int:
 
     baseline = json.loads(Path(args.baseline).read_text())
     measured = load_measured(args.bench)
+    suite_findings = check_suites(baseline, load_suites(args.bench))
 
     if args.update:
+        # a refresh from an incomplete measurement would silently keep
+        # stale values — refuse instead.  Both holes matter: a suite's
+        # BENCH json absent entirely, and a suite that crashed (run.py
+        # still writes its json, but only with an <suite>_ERROR row,
+        # so the gated metrics are missing from the measured rows)
+        stale = [f"{n}: gated metric missing from measured rows"
+                 for n in baseline.get("metrics", {})
+                 if n not in measured]
+        refusals = suite_findings + stale
+        if refusals:
+            print(f"baseline NOT refreshed "
+                  f"({len(refusals)} findings):")
+            for f in refusals:
+                print(f"  - {f}")
+            return 1
         refreshed = update_baseline(baseline, measured)
         Path(args.baseline).write_text(
             json.dumps(refreshed, indent=2) + "\n")
         print(f"baseline refreshed: {args.baseline}")
         return 0
 
-    findings = compare(baseline, measured)
+    findings = suite_findings + compare(baseline, measured)
     gated = len(baseline.get("metrics", {}))
     if findings:
         print(f"benchmark regression gate FAILED "

@@ -22,11 +22,11 @@ import sys
 import time
 from pathlib import Path
 
-from benchmarks import (ablations, beyond_paper, fig1a_delay_vs_batch,
-                        fig1b_fid_vs_steps, fig2a_e2e_delay,
-                        fig2b_fid_vs_services, fig2c_fid_vs_min_delay,
-                        kernels_bench, multiserver, online_admission,
-                        roofline_report)
+from benchmarks import (ablations, beyond_paper, churn,
+                        fig1a_delay_vs_batch, fig1b_fid_vs_steps,
+                        fig2a_e2e_delay, fig2b_fid_vs_services,
+                        fig2c_fid_vs_min_delay, kernels_bench,
+                        multiserver, online_admission, roofline_report)
 
 
 def api_suite(rows):
@@ -62,6 +62,7 @@ SUITES = {
     "fig2c": fig2c_fid_vs_min_delay.run,
     "online": online_admission.run,
     "multiserver": multiserver.run,
+    "churn": churn.run,
     "roofline": roofline_report.run,
     "kernels": kernels_bench.run,
     "beyond": beyond_paper.run,

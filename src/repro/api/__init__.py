@@ -9,8 +9,8 @@ docs/SCENARIOS.md), and ``MultiServerProvisioner`` (placement x
 per-cell provisioning over M edge servers).
 """
 
-from repro.api.protocols import (Allocator, Scheduler, Workload,
-                                 WorkloadOutput)
+from repro.api.protocols import (Allocator, OffsetScheduler, Scheduler,
+                                 Workload, WorkloadOutput)
 from repro.api.registry import (ADMISSIONS, ALLOCATORS, PLACEMENTS,
                                 SCHEDULERS, WORKLOADS, get_admission,
                                 get_allocator, get_placement,
@@ -34,7 +34,8 @@ from repro.api.multiserver import (MultiOnlineReport,
                                    MultiServerProvisioner)
 
 __all__ = [
-    "Allocator", "Scheduler", "Workload", "WorkloadOutput",
+    "Allocator", "OffsetScheduler", "Scheduler", "Workload",
+    "WorkloadOutput",
     "ADMISSIONS", "ALLOCATORS", "PLACEMENTS", "SCHEDULERS", "WORKLOADS",
     "register_admission", "register_allocator", "register_placement",
     "register_scheduler", "register_workload",

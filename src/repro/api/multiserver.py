@@ -118,12 +118,17 @@ class MultiOnlineReport:
     def reject_rate(self) -> float:
         return self.result.reject_rate
 
+    @property
+    def handoffs(self) -> int:
+        return self.result.handoffs
+
     def summary(self) -> str:
         head = (f"[multi-online x{self.scenario.n_servers}] "
                 f"placement={self.placement_name} "
                 f"scheduler={self.scheduler_name} "
                 f"allocator={self.allocator_name} "
-                f"admission={self.admission_name}")
+                f"admission={self.admission_name} "
+                f"handoffs={self.handoffs}")
         return head + "\n" + self.result.result.summary()
 
 
@@ -212,6 +217,7 @@ class MultiServerProvisioner:
 
     def run_online(self, admission="admit_all", online_placement=None,
                    admission_kwargs: Optional[dict] = None, *,
+                   handoff: bool = False,
                    validate: bool = True) -> MultiOnlineReport:
         """Event-driven arrivals over the M cells.
 
@@ -222,6 +228,9 @@ class MultiServerProvisioner:
         apply here — it solves a full assignment, which has no meaning
         when requests are revealed one at a time.  ``admission`` takes
         registry names or callables as in ``OnlineProvisioner``.
+        ``handoff=True`` lets pending not-yet-started services migrate
+        to a strictly better cell at each replan instant (the report's
+        ``handoffs`` counts the moves).
         """
         adm = ADMISSIONS.resolve(admission)
         if admission_kwargs:
@@ -229,7 +238,8 @@ class MultiServerProvisioner:
         result = simulate_online_multi(
             self.scenario, self.scheduler, self._allocator(),
             delay=self.delay, quality=self.quality, admission=adm,
-            placement=online_placement, validate=validate)
+            placement=online_placement, handoff=handoff,
+            validate=validate)
         return MultiOnlineReport(
             scenario=self.scenario, result=result,
             placement_name=(display_name(online_placement)

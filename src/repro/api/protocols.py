@@ -34,6 +34,33 @@ class Scheduler(Protocol):
 
 
 @runtime_checkable
+class OffsetScheduler(Scheduler, Protocol):
+    """Optional P2 extension: a scheduler that reasons natively about
+    per-service progress.
+
+    ``plan`` receives ``offsets`` — denoising steps each service has
+    already executed, positional, aligned with ``services`` — and must
+    return a plan of *additional* steps whose quality is judged as
+    ``fid(offset + new)``.  The online replanner
+    (``repro.core.online``) dispatches to ``plan`` whenever progress
+    exists, instead of wrapping the quality model; calling the
+    instance itself is the plain ``Scheduler`` path (zero offsets), so
+    every ``OffsetScheduler`` still drops into static pipelines
+    unchanged.
+
+    ``supports_offsets`` must be ``True``: it is the dispatch marker
+    the replanner probes for (an unrelated ``plan`` helper on a custom
+    scheduler must never be mistaken for this protocol)."""
+
+    supports_offsets: bool
+
+    def plan(self, services: Sequence[ServiceRequest],
+             tau_prime: Dict[int, float], delay: DelayModel,
+             quality: QualityModel,
+             offsets: Sequence[int]) -> BatchPlan: ...
+
+
+@runtime_checkable
 class Allocator(Protocol):
     """P1 solver: scenario (+ inner scheduler for fitness) -> bandwidth
     allocation, one entry per service, summing to the scenario budget."""

@@ -1,9 +1,12 @@
 """Scheduler registry entries: the paper's Algorithm 1, its Sec.-IV
-baselines, the balanced ``equal_steps`` baseline, and the exact
-``optimal`` search for tiny instances.
+baselines, the balanced ``equal_steps`` baseline, the exact
+``optimal`` search for tiny instances, and the offset-native
+``stacking_offset`` (progress-aware replanning, ``repro.core.offset``).
 
 All share the uniform ``Scheduler`` signature
-``(services, tau_prime, delay, quality) -> BatchPlan``.
+``(services, tau_prime, delay, quality) -> BatchPlan``;
+``stacking_offset`` additionally satisfies ``OffsetScheduler`` (a
+``plan(..., offsets)`` method the online replanner dispatches to).
 """
 
 from __future__ import annotations
@@ -14,6 +17,7 @@ from repro.api.registry import register_scheduler
 from repro.core.baselines import (fixed_size_batching, greedy_batching,
                                   single_instance)
 from repro.core.delay_model import DelayModel
+from repro.core.offset import stacking_offset
 from repro.core.optimal import optimal_plan
 from repro.core.plan import BatchPlan
 from repro.core.quality_model import QualityModel
@@ -25,6 +29,10 @@ register_scheduler("greedy", greedy_batching)
 register_scheduler("fixed_size", fixed_size_batching, aliases=("fixed",))
 register_scheduler("single_instance", single_instance, aliases=("single",))
 register_scheduler("optimal", optimal_plan)
+# the OffsetScheduler instance: statically identical to `stacking`
+# (zero offsets delegate), offset-native under online replanning
+register_scheduler("stacking_offset", stacking_offset,
+                   aliases=("offset",))
 
 
 @register_scheduler("equal_steps")

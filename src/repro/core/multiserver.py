@@ -155,6 +155,9 @@ class MultiOnlineResult:
     """OnlineResult plus where every admitted service ran."""
     result: OnlineResult
     assignment: Dict[int, int]         # admitted service id -> server id
+    handoffs: int = 0                  # cross-cell migrations performed
+    handoff_log: List[tuple] = dataclasses.field(default_factory=list)
+    # handoff_log entries: (t, service_id, from_server, to_server)
 
     @property
     def outcomes(self):
@@ -230,12 +233,15 @@ class MultiOnlineSimulation:
                  delay: DelayModel, quality: QualityModel,
                  admission: AdmissionFn,
                  placement: Optional[OnlinePlacementFn] = None,
-                 validate: bool = True):
+                 handoff: bool = False, validate: bool = True):
         self.scn = scn
         self.quality = quality
         self.admission = admission
         self.placement = placement if placement is not None else \
             earliest_free
+        self.handoff = handoff
+        self.handoff_count = 0
+        self.handoff_log: List[tuple] = []
         self.servers = scn.server_list
         self.states: Dict[int, _ServiceState] = {
             s.id: _ServiceState(s) for s in scn.services}
@@ -276,6 +282,73 @@ class MultiOnlineSimulation:
             id=svc.id, arrival=svc.arrival, admitted=False,
             projected=projected))
 
+    # -- cross-cell handoff ----------------------------------------------
+
+    def _handoff_pass(self, t_now: float) -> None:
+        """Migrate pending not-yet-started services to a better cell.
+
+        Runs at each replan instant (after an arrival is processed).  A
+        service that was admitted but has executed zero denoising steps
+        is not bound to its cell by any progress, so it may move: every
+        other cell with room trial-replans with the service included,
+        and the service migrates to the best strictly better projected
+        outcome (feasibility first, then FID, then generation end —
+        the ``best_projection`` ordering).  Ties never move, so the
+        pass cannot ping-pong; services with executed steps never move,
+        so progress is never re-run (the no-resurrection invariant
+        holds per track).  With one cell this is a no-op, preserving
+        the single-server bit-exactness invariant.
+        """
+        candidates = sorted(
+            k for tr in self.tracks for k in tr.pending
+            if self.states[k].steps_done == 0)
+        for k in candidates:
+            src = self.assignment.get(k)
+            if src is None:
+                continue
+            s_tr = self.tracks[src]
+            svc = self.states[k].svc
+            cur = _project(svc, s_tr.active, self.quality,
+                           self.scn.content_bits)
+            cur_key = (0 if cur.met_deadline else 1, cur.fid,
+                       cur.e2e_delay)
+            best = None
+            for m, tr in enumerate(self.tracks):
+                if m == src or not self.servers[m].has_room(
+                        len(tr.owned)):
+                    continue
+                t_free = max(t_now, tr.t_free)
+                trial = tr.replan(tr.pending | {k}, t_free)
+                tr.replan_count -= 1          # probing, not a replan yet
+                p = _project(svc, trial, self.quality,
+                             self.scn.content_bits)
+                key = (0 if p.met_deadline else 1, p.fid, p.e2e_delay, m)
+                if key[:3] < cur_key and (best is None or key < best[0]):
+                    best = (key, m, trial)
+            if best is not None:
+                self._migrate(k, src, best[1], best[2], t_now)
+
+    def _migrate(self, k: int, src: int, dst: int, trial,
+                 t_now: float) -> None:
+        """Move service ``k`` (no executed steps) from cell ``src`` to
+        ``dst``: the source replans without it, the destination adopts
+        the trial plan that included it."""
+        s_tr, d_tr = self.tracks[src], self.tracks[dst]
+        s_tr.pending.discard(k)
+        s_tr.owned.discard(k)
+        remaining = set(s_tr.pending)
+        if remaining:
+            s_tr.active = s_tr.replan(remaining,
+                                      max(t_now, s_tr.t_free))
+            s_tr._settle_no_step_services(s_tr.active)
+        else:
+            s_tr.active = None
+        d_tr.replan_count += 1                # the probe became real
+        d_tr.adopt(k, trial)
+        self.assignment[k] = dst
+        self.handoff_count += 1
+        self.handoff_log.append((t_now, k, src, dst))
+
     def run(self) -> MultiOnlineResult:
         for svc in sorted(self.scn.services,
                           key=lambda s: (s.arrival, s.id)):
@@ -308,12 +381,16 @@ class MultiOnlineSimulation:
                 tr.adopt(svc.id, trial)
                 self.assignment[svc.id] = m
             # on reject every track's plan keeps running untouched
+            if self.handoff and len(self.tracks) > 1:
+                self._handoff_pass(svc.arrival)
         for tr in self.tracks:
             tr.execute_until(math.inf)
         result = _collect_result(self.scn, self.states, self.decisions,
                                  self.quality)
         return MultiOnlineResult(result=result,
-                                 assignment=dict(self.assignment))
+                                 assignment=dict(self.assignment),
+                                 handoffs=self.handoff_count,
+                                 handoff_log=list(self.handoff_log))
 
 
 def simulate_online_multi(scn: Scenario, scheduler,
@@ -322,13 +399,19 @@ def simulate_online_multi(scn: Scenario, scheduler,
                           quality: Optional[QualityModel] = None,
                           admission: Optional[AdmissionFn] = None,
                           placement: Optional[OnlinePlacementFn] = None,
+                          handoff: bool = False,
                           validate: bool = True) -> MultiOnlineResult:
     """Event-driven arrivals over M edge cells (module docstring).
 
     ``placement`` routes each arrival to a server (default
     ``earliest_free``; ``best_projection`` trial-replans everywhere).
-    With ``scn.n_servers == 1`` any placement degenerates to the
-    single-server ``simulate_online`` path bit-for-bit.
+    ``handoff=True`` additionally runs a cross-cell handoff pass at
+    every replan instant: pending services with no executed steps may
+    migrate to a cell whose trial replan projects a strictly better
+    outcome (``MultiOnlineResult.handoffs`` counts the moves).  With
+    ``scn.n_servers == 1`` any placement (and the handoff pass, which
+    has no other cell to probe) degenerates to the single-server
+    ``simulate_online`` path bit-for-bit.
     """
     if admission is None:
         admission = lambda svc, projected, states: True   # noqa: E731
@@ -336,5 +419,6 @@ def simulate_online_multi(scn: Scenario, scheduler,
         scn, scheduler, allocator,
         delay if delay is not None else DelayModel(),
         quality if quality is not None else PowerLawFID(),
-        admission, placement=placement, validate=validate)
+        admission, placement=placement, handoff=handoff,
+        validate=validate)
     return sim.run()

@@ -63,6 +63,17 @@ AdmissionFn = Callable[..., bool]
 _TIE = 1e-6   # deadline slack, matches repro.core.simulator
 
 
+def _offset_native(scheduler) -> bool:
+    """Does this scheduler implement the ``OffsetScheduler`` extension
+    (a ``plan(services, tau_prime, delay, quality, offsets)`` method
+    plus the ``supports_offsets`` marker)?  The explicit marker keeps a
+    custom scheduler's unrelated ``plan`` helper from being mistaken
+    for the protocol; duck-typed so ``repro.core`` never imports
+    ``repro.api``."""
+    return bool(getattr(scheduler, "supports_offsets", False)) \
+        and callable(getattr(scheduler, "plan", None))
+
+
 @dataclasses.dataclass
 class AdmissionDecision:
     """One arrival's verdict, with the outcome the trial replan projected
@@ -220,7 +231,11 @@ class _ServerTrack:
         self.states = states
         self.validate = validate
 
-        self.owned: Set[int] = set()        # every id ever admitted here
+        # every id admitted here and not since handed off to another
+        # cell (multiserver._migrate moves never-started services
+        # between tracks); drives the reserved-bandwidth filter in
+        # residual_scenario and the per-cell capacity count
+        self.owned: Set[int] = set()
         self.pending: Set[int] = set()      # admitted, generation incomplete
         self.active: Optional[_ActivePlan] = None
         self.t_free = 0.0
@@ -303,13 +318,26 @@ class _ServerTrack:
         if any(offsets):
             quality = _OffsetQuality(self.quality, offsets)
 
-            def scheduler(services, tau_prime, delay, q,
-                          _inner=self.scheduler, _oq=quality):
-                # every candidate allocation implies fresh tau' — mark
-                # which in-progress services it starves before the inner
-                # scheduler's own mean_fid evaluations run
-                _oq.refresh_doomed(services, tau_prime)
-                return _inner(services, tau_prime, delay, q)
+            if _offset_native(self.scheduler):
+                # offset-native dispatch: the scheduler plans against
+                # per-service progress itself (base quality model +
+                # offsets); the _OffsetQuality wrapper still scores the
+                # allocator's fitness evaluations so P1 stays
+                # progress-aware too
+                def scheduler(services, tau_prime, delay, q,
+                              _inner=self.scheduler, _oq=quality,
+                              _base=self.quality, _off=offsets):
+                    _oq.refresh_doomed(services, tau_prime)
+                    return _inner.plan(services, tau_prime, delay,
+                                       _base, _off)
+            else:
+                def scheduler(services, tau_prime, delay, q,
+                              _inner=self.scheduler, _oq=quality):
+                    # every candidate allocation implies fresh tau' —
+                    # mark which in-progress services it starves before
+                    # the inner scheduler's own mean_fid evaluations run
+                    _oq.refresh_doomed(services, tau_prime)
+                    return _inner(services, tau_prime, delay, q)
 
         alloc = np.asarray(self.allocator(
             res_scn, scheduler, self.delay, quality))

@@ -16,7 +16,7 @@ outer search does, through whatever QualityModel is supplied.
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 from repro.core.delay_model import DelayModel
 from repro.core.plan import BatchPlan
@@ -25,9 +25,18 @@ from repro.core.service import ServiceRequest
 
 
 def stacking_pass(service_ids: Sequence[int], tau_prime: Dict[int, float],
-                  delay: DelayModel, t_star: int) -> BatchPlan:
-    """One clustering-packing-batching sweep for a fixed T* (Alg. 1 l.3-7)."""
+                  delay: DelayModel, t_star: int,
+                  offsets: Optional[Dict[int, int]] = None) -> BatchPlan:
+    """One clustering-packing-batching sweep for a fixed T* (Alg. 1 l.3-7).
+
+    ``offsets`` (steps a service already executed before this plan,
+    default zero) shift the projected counts ``Tp`` the priority
+    cluster is formed on, turning T* into a *total*-step water level —
+    the offset-native sweep of ``repro.core.offset``.  With no offsets
+    this is the paper's Algorithm 1 inner pass exactly.
+    """
     a, b = delay.a, delay.b
+    off = offsets or {}
     taup = {k: float(tau_prime[k]) for k in service_ids}
     Tc = {k: 0 for k in service_ids}
     active = [k for k in service_ids if taup[k] >= delay.min_task_delay()]
@@ -37,9 +46,9 @@ def stacking_pass(service_ids: Sequence[int], tau_prime: Dict[int, float],
     t = 0.0
 
     while active:
-        # ---- clustering (Eqs. 15-18) -------------------------------------
+        # ---- clustering (Eqs. 15-18, offset-shifted) ---------------------
         Te = {k: delay.max_steps(taup[k]) for k in active}
-        Tp = {k: Tc[k] + Te[k] for k in active}
+        Tp = {k: off.get(k, 0) + Tc[k] + Te[k] for k in active}
         order = sorted(active, key=lambda k: (Tp[k], taup[k], k))
         F = [k for k in order if Tp[k] <= t_star]
 

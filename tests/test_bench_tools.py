@@ -103,13 +103,104 @@ class TestCompareGate:
 
     def test_committed_baseline_gates_known_suites(self):
         """The repo baseline must only gate metrics the CI bench job
-        actually produces (api, online, multiserver suites)."""
+        actually produces (api, online, multiserver, churn suites)."""
         baseline = json.loads(
             (ROOT / "benchmarks" / "baseline.json").read_text())
         assert baseline["metrics"], "baseline must gate something"
         for name, spec in baseline["metrics"].items():
-            assert name.split("_")[0] in ("online", "multiserver", "api")
+            assert name.split("_")[0] in ("online", "multiserver",
+                                          "api", "churn", "offset")
             assert spec["kind"] in ("flag", "lower_is_better")
+        # every required suite is one the CI bench job runs (ci.yml)
+        assert set(baseline["required_suites"]) == \
+            {"api", "online", "multiserver", "churn"}
+
+    def test_churn_dominance_flag_is_gated(self):
+        """ISSUE 4 acceptance: the bench gate must pin the offset-vs-
+        shared dominance claim and the handoff sanity flag at 1."""
+        baseline = json.loads(
+            (ROOT / "benchmarks" / "baseline.json").read_text())
+        m = baseline["metrics"]
+        assert m["offset_beats_shared_under_churn"] == \
+            {"value": 1.0, "kind": "flag"}
+        assert m["churn_handoff_sane"] == {"value": 1.0, "kind": "flag"}
+
+
+class TestRequiredSuites:
+    """A suite dropped from the CI bench invocation must fail the gate
+    even if its gated metrics were pruned from the baseline."""
+
+    BASE = {"metrics": dict(BASELINE["metrics"]),
+            "required_suites": ["online", "churn"]}
+
+    def test_all_suites_present_passes(self, tmp_path):
+        p1 = _bench_file(tmp_path, "online",
+                         [("online_r0.5_stacking", 6.0, ""),
+                          ("online_stacking_best", 1.0, "")])
+        p2 = _bench_file(tmp_path, "churn", [("x", 1.0, "")])
+        assert compare.check_suites(
+            self.BASE, compare.load_suites([p1, p2])) == []
+
+    def test_missing_suite_fails(self, tmp_path):
+        p1 = _bench_file(tmp_path, "online",
+                         [("online_r0.5_stacking", 6.0, ""),
+                          ("online_stacking_best", 1.0, "")])
+        findings = compare.check_suites(self.BASE,
+                                        compare.load_suites([p1]))
+        assert len(findings) == 1
+        assert "churn" in findings[0]
+
+    def test_main_fails_on_missing_suite(self, tmp_path):
+        base_path = tmp_path / "baseline.json"
+        base_path.write_text(json.dumps(self.BASE))
+        p1 = _bench_file(tmp_path, "online",
+                         [("online_r0.5_stacking", 6.0, ""),
+                          ("online_stacking_best", 1.0, "")])
+        assert compare.main([str(p1),
+                             "--baseline", str(base_path)]) == 1
+
+    def test_update_preserves_required_suites(self, tmp_path):
+        base_path = tmp_path / "baseline.json"
+        base_path.write_text(json.dumps(self.BASE))
+        p1 = _bench_file(tmp_path, "online",
+                         [("online_r0.5_stacking", 4.0, ""),
+                          ("online_stacking_best", 1.0, "")])
+        p2 = _bench_file(tmp_path, "churn", [("x", 1.0, "")])
+        assert compare.main([str(p1), str(p2),
+                             "--baseline", str(base_path),
+                             "--update"]) == 0
+        refreshed = json.loads(base_path.read_text())
+        assert refreshed["required_suites"] == ["online", "churn"]
+
+    def test_update_refuses_partial_measurement(self, tmp_path):
+        """A refresh from files missing a required suite must fail
+        instead of silently keeping that suite's stale values."""
+        base_path = tmp_path / "baseline.json"
+        base_path.write_text(json.dumps(self.BASE))
+        p1 = _bench_file(tmp_path, "online",
+                         [("online_r0.5_stacking", 4.0, ""),
+                          ("online_stacking_best", 1.0, "")])
+        assert compare.main([str(p1), "--baseline", str(base_path),
+                             "--update"]) == 1
+        unchanged = json.loads(base_path.read_text())
+        assert unchanged["metrics"]["online_r0.5_stacking"]["value"] \
+            == 6.0
+
+    def test_update_refuses_crashed_suite(self, tmp_path):
+        """A suite that crashed still writes its BENCH json (with only
+        an <suite>_ERROR row), so the suite-name check passes — the
+        refresh must still refuse because gated metrics are missing."""
+        base_path = tmp_path / "baseline.json"
+        base_path.write_text(json.dumps(self.BASE))
+        p1 = _bench_file(tmp_path, "online",
+                         [("online_ERROR", 0.0, "RuntimeError('x')")])
+        p2 = _bench_file(tmp_path, "churn", [("x", 1.0, "")])
+        assert compare.main([str(p1), str(p2),
+                             "--baseline", str(base_path),
+                             "--update"]) == 1
+        unchanged = json.loads(base_path.read_text())
+        assert unchanged["metrics"]["online_r0.5_stacking"]["value"] \
+            == 6.0
 
 
 class TestJsonWriter:
@@ -151,6 +242,7 @@ class TestBenchShim:
         assert "multiserver" in suites
         assert "online" in suites
         assert "api" in suites
+        assert "churn" in suites
 
     def test_shim_is_idempotent(self, clean_env):
         src = ("import importlib, sys, benchmarks;"

@@ -1,0 +1,290 @@
+"""Offset-native replanning (ISSUE 4 tentpole): the OffsetScheduler
+protocol, stacking_offset's equivalence invariants (zero offsets ==
+static stacking; all-arrivals-at-t=0 == static simulate; n_servers=1 ==
+single-server online, handoff included), offset-native dispatch in the
+online replanner, and the cross-cell handoff pass."""
+
+import numpy as np
+import pytest
+
+from repro.api import (OffsetScheduler, OnlineProvisioner, Provisioner,
+                       SCHEDULERS, get_allocator, get_scheduler)
+from repro.core.delay_model import DelayModel
+from repro.core.multiserver import (MultiOnlineSimulation,
+                                    simulate_online_multi)
+from repro.core.offset import (StackingOffset, offset_pass,
+                               offset_stacking_pass, stacking_offset)
+from repro.core.online import simulate_online
+from repro.core.quality_model import PowerLawFID
+from repro.core.service import (EdgeServer, Scenario, ServiceRequest,
+                                make_scenario)
+from repro.core.stacking import stacking, stacking_pass
+
+DELAY = DelayModel()
+QUALITY = PowerLawFID()
+
+
+def _score(plan, ids, off, tau_prime, quality=QUALITY):
+    """The progress-aware replan objective (mirrors _OffsetQuality
+    including the doomed rule)."""
+    doomed = {k for k in ids if off[k] > 0 and tau_prime[k] < 0}
+    return float(np.mean([
+        quality.fid(0) if k in doomed
+        else quality.fid(off[k] + plan.steps_completed.get(k, 0))
+        for k in ids]))
+
+
+class TestProtocolAndRegistry:
+    def test_registered_with_alias(self):
+        assert "stacking_offset" in SCHEDULERS
+        assert "offset" in SCHEDULERS
+        assert get_scheduler("stacking_offset") is stacking_offset
+        assert get_scheduler("offset") is stacking_offset
+
+    def test_satisfies_both_protocols(self):
+        from repro.api import Scheduler
+        assert isinstance(stacking_offset, Scheduler)
+        assert isinstance(stacking_offset, OffsetScheduler)
+
+    def test_plain_schedulers_are_not_offset_schedulers(self):
+        assert not isinstance(get_scheduler("stacking"), OffsetScheduler)
+        assert not isinstance(get_scheduler("greedy"), OffsetScheduler)
+
+
+class TestZeroOffsetEquivalence:
+    """Invariant 1: with zero offsets everywhere, stacking_offset IS
+    Algorithm 1 (it delegates), so plans are bit-identical."""
+
+    @pytest.mark.parametrize("seed", [0, 1, 7])
+    def test_call_equals_stacking_plan(self, seed):
+        scn = make_scenario(K=10, seed=seed)
+        tp = {s.id: s.deadline * 0.6 for s in scn.services}
+        a = stacking(scn.services, tp, DELAY, QUALITY)
+        b = stacking_offset(scn.services, tp, DELAY, QUALITY)
+        assert a.batches == b.batches
+        assert a.start_times == b.start_times
+        assert a.steps_completed == b.steps_completed
+
+    def test_explicit_zero_offsets_delegate_too(self):
+        scn = make_scenario(K=8, seed=3)
+        tp = {s.id: s.deadline * 0.5 for s in scn.services}
+        a = stacking(scn.services, tp, DELAY, QUALITY)
+        b = stacking_offset.plan(scn.services, tp, DELAY, QUALITY,
+                                 [0] * scn.K)
+        assert a.steps_completed == b.steps_completed
+
+    @pytest.mark.parametrize("allocator", ["inv_se", "equal"])
+    def test_static_provisioner_identical(self, allocator):
+        scn = make_scenario(K=8, seed=5)
+        st = Provisioner(scn, scheduler="stacking",
+                         allocator=allocator).run()
+        of = Provisioner(scn, scheduler="stacking_offset",
+                         allocator=allocator).run()
+        assert of.sim.outcomes == st.sim.outcomes
+
+    @pytest.mark.parametrize("t_star", [1, 3, 10])
+    def test_offset_stacking_pass_degenerates(self, t_star):
+        ids = list(range(6))
+        tp = {k: 2.0 + 0.8 * k for k in ids}
+        zero = {k: 0 for k in ids}
+        a = stacking_pass(ids, tp, DELAY, t_star)
+        b = offset_stacking_pass(ids, tp, DELAY, t_star, zero)
+        assert a.batches == b.batches
+        assert a.steps_completed == b.steps_completed
+
+
+class TestStaticOnlineEquivalence:
+    """Invariant 2: all arrivals at t=0 reproduce static simulate."""
+
+    @pytest.mark.parametrize("seed", [0, 4])
+    def test_online_equals_static(self, seed):
+        scn = make_scenario(K=8, seed=seed)
+        assert scn.is_static
+        static = Provisioner(scn, scheduler="stacking_offset",
+                             allocator="inv_se").run()
+        online = OnlineProvisioner(scn, scheduler="stacking_offset",
+                                   allocator="inv_se").run()
+        assert online.result.outcomes == static.sim.outcomes
+        assert online.mean_fid == static.mean_fid
+
+
+class TestSingleServerEquivalence:
+    """Invariant 3: n_servers=1 reproduces the single-server online
+    path bit-for-bit — with the offset scheduler and with handoff
+    enabled (no other cell exists to probe)."""
+
+    @pytest.mark.parametrize("handoff", [False, True])
+    def test_one_cell_multi_equals_single(self, handoff):
+        scn = make_scenario(K=10, arrival_rate=1.0, seed=2)
+        single = simulate_online(scn, get_scheduler("stacking_offset"),
+                                 get_allocator("inv_se"), DELAY, QUALITY)
+        multi = simulate_online_multi(
+            scn, get_scheduler("stacking_offset"),
+            get_allocator("inv_se"), DELAY, QUALITY, handoff=handoff)
+        assert multi.result.outcomes == single.outcomes
+        assert multi.handoffs == 0
+
+
+class TestOffsetNativeDispatch:
+    def test_replans_call_plan_with_real_offsets(self):
+        calls = []
+
+        class Spy(StackingOffset):
+            def plan(self, services, tau_prime, delay, quality,
+                     offsets):
+                calls.append(list(offsets))
+                return super().plan(services, tau_prime, delay,
+                                    quality, offsets)
+
+        scn = make_scenario(K=8, tau_min=3.0, tau_max=8.0,
+                            arrival_rate=1.0, seed=1)
+        res = simulate_online(scn, Spy(), get_allocator("inv_se"),
+                              DELAY, QUALITY)
+        assert len(res.outcomes) == scn.K
+        # at least one replan saw executed steps and dispatched natively
+        assert any(any(c) for c in calls)
+
+    def test_unrelated_plan_helper_is_not_dispatched(self):
+        """Dispatch needs the supports_offsets marker: a scheduler with
+        an unrelated `plan` helper must stay on the wrapper path."""
+
+        class WithHelper:
+            def __call__(self, services, tau_prime, delay, quality):
+                return stacking(services, tau_prime, delay, quality)
+
+            def plan(self, *args):         # wrong-protocol helper
+                raise AssertionError("must never be dispatched")
+
+        scn = make_scenario(K=8, tau_min=3.0, tau_max=8.0,
+                            arrival_rate=1.0, seed=1)
+        ref = simulate_online(scn, get_scheduler("stacking"),
+                              get_allocator("inv_se"), DELAY, QUALITY)
+        got = simulate_online(scn, WithHelper(),
+                              get_allocator("inv_se"), DELAY, QUALITY)
+        assert got.outcomes == ref.outcomes
+
+    def test_supports_offsets_marker_set(self):
+        assert stacking_offset.supports_offsets is True
+
+    def test_offset_plans_validate_and_respect_budgets(self):
+        scn = make_scenario(K=8, seed=6)
+        tp = {s.id: s.deadline * 0.4 for s in scn.services}
+        offsets = [3, 0, 7, 1, 0, 12, 2, 5]
+        plan = stacking_offset.plan(scn.services, tp, DELAY, QUALITY,
+                                    offsets)
+        plan.validate(gen_deadlines=tp)
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_never_scores_worse_than_shared_horizon(self, seed):
+        """The chosen plan's progress-aware objective is never worse
+        than what the _OffsetQuality-wrapped stacking would pick (its
+        candidates are a subset of stacking_offset's)."""
+        rng = np.random.default_rng(seed)
+        scn = make_scenario(K=8, seed=seed)
+        tp = {s.id: float(s.deadline * rng.uniform(0.2, 0.7))
+              for s in scn.services}
+        offsets = [int(o) for o in rng.integers(0, 14, size=scn.K)]
+        if not any(offsets):
+            offsets[0] = 5
+        ids = [s.id for s in scn.services]
+        off = dict(zip(ids, offsets))
+        native = stacking_offset.plan(scn.services, tp, DELAY, QUALITY,
+                                      offsets)
+        shared = stacking(scn.services, tp, DELAY, QUALITY)
+        assert _score(native, ids, off, tp) <= \
+            _score(shared, ids, off, tp) + 1e-9
+
+    def test_water_level_retires_nearly_done_services(self):
+        """A service far past the water level gets zero new steps in
+        the level's target vector while young services still denoise."""
+        ids = [0, 1]
+        tp = {0: 2.0, 1: 2.0}
+        plan = offset_pass(ids, tp, DELAY, targets={0: 0, 1: 4})
+        assert plan.steps_completed[0] == 0
+        assert plan.steps_completed[1] > 0
+        plan.validate(gen_deadlines=tp)
+
+
+class TestHandoff:
+    def _two_cell_scn(self):
+        # two identical cells; all arrivals forced onto cell 0 by the
+        # placement below, so the handoff pass has obvious work to do
+        svcs = [ServiceRequest(id=0, deadline=6.0, spectral_eff=7.0),
+                ServiceRequest(id=1, deadline=6.0, spectral_eff=7.0,
+                               arrival=0.5),
+                ServiceRequest(id=2, deadline=6.0, spectral_eff=7.0,
+                               arrival=0.6)]
+        servers = [EdgeServer(id=0, bandwidth_hz=20_000.0),
+                   EdgeServer(id=1, bandwidth_hz=20_000.0)]
+        return Scenario(services=svcs, total_bandwidth_hz=40_000.0,
+                        servers=servers)
+
+    def test_handoff_moves_pending_service_to_idle_cell(self):
+        scn = self._two_cell_scn()
+        pin0 = lambda svc, sim: 0     # noqa: E731
+        sim = MultiOnlineSimulation(
+            scn, get_scheduler("stacking_offset"),
+            get_allocator("inv_se"), DELAY, QUALITY,
+            admission=lambda *a: True, placement=pin0, handoff=True)
+        res = sim.run()
+        assert res.handoffs >= 1
+        assert any(dst == 1 for _, _, _, dst in res.handoff_log)
+        # migrated services execute on their new cell only
+        seen = {}
+        for m, tr in enumerate(sim.tracks):
+            for _, k, _ in tr.executed_log:
+                assert seen.setdefault(k, m) == m
+        assert set(res.assignment.values()) == {0, 1}
+
+    def test_handoff_never_hurts_here(self):
+        scn = self._two_cell_scn()
+        pin0 = lambda svc, sim: 0     # noqa: E731
+        runs = {}
+        for ho in (False, True):
+            sim = MultiOnlineSimulation(
+                scn, get_scheduler("stacking_offset"),
+                get_allocator("inv_se"), DELAY, QUALITY,
+                admission=lambda *a: True, placement=pin0, handoff=ho)
+            runs[ho] = sim.run()
+        assert runs[False].handoffs == 0
+        assert runs[True].result.mean_fid <= \
+            runs[False].result.mean_fid + 1e-9
+
+    def test_handoff_log_entries_well_formed(self):
+        scn = make_scenario(K=12, n_servers=3, arrival_rate=1.0,
+                            tau_min=3.0, tau_max=8.0,
+                            server_speed_range=(0.6, 1.4), seed=0)
+        res = simulate_online_multi(
+            scn, get_scheduler("stacking_offset"),
+            get_allocator("inv_se"), DELAY, QUALITY, handoff=True)
+        assert res.handoffs == len(res.handoff_log)
+        for t, k, src, dst in res.handoff_log:
+            assert src != dst
+            assert res.assignment[k] is not None
+        # only never-started services move, so the no-resurrection
+        # invariant cannot be violated by a migration: every admitted
+        # service's executed steps all live on its final cell
+        admitted = {o.id for o in res.outcomes}
+        assert set(res.assignment) <= admitted
+
+    def test_handoff_is_deterministic(self):
+        scn = make_scenario(K=10, n_servers=3, arrival_rate=2.0,
+                            tau_min=3.0, tau_max=8.0, seed=5)
+        runs = [simulate_online_multi(
+            scn, get_scheduler("stacking_offset"),
+            get_allocator("inv_se"), DELAY, QUALITY, handoff=True)
+            for _ in range(2)]
+        assert runs[0].result.outcomes == runs[1].result.outcomes
+        assert runs[0].handoff_log == runs[1].handoff_log
+
+    def test_run_online_exposes_handoffs(self):
+        from repro.api import MultiServerProvisioner
+        scn = make_scenario(K=9, n_servers=3, arrival_rate=1.0,
+                            tau_min=3.0, tau_max=8.0, seed=1)
+        prov = MultiServerProvisioner(scn, scheduler="stacking_offset",
+                                      allocator="inv_se")
+        off = prov.run_online()
+        on = prov.run_online(handoff=True)
+        assert off.handoffs == 0
+        assert on.handoffs >= 0
+        assert "handoffs=" in on.summary()

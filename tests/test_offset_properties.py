@@ -1,0 +1,99 @@
+"""Hypothesis property tests for the offset-native scheduler (ISSUE 4
+satellite).
+
+The anchor property: with all-zero offsets ``stacking_offset`` returns
+a plan with *identical* mean FID to ``stacking`` on arbitrary random
+scenarios (it must be Algorithm 1 exactly — the delegation is an
+implementation detail, the property is the contract).  Plus: plans
+with arbitrary offsets still satisfy the paper's constraints and never
+score worse than the shared-horizon plan under the progress-aware
+objective.  Skipped (not a collection error) when ``hypothesis`` is
+not installed; ``pip install -r requirements-dev.txt`` brings it in.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.delay_model import DelayModel
+from repro.core.offset import stacking_offset
+from repro.core.quality_model import PowerLawFID
+from repro.core.service import ServiceRequest
+from repro.core.stacking import stacking
+
+DELAY = DelayModel()          # paper constants
+QUALITY = PowerLawFID()
+
+
+def _services(taus):
+    return [ServiceRequest(id=i, deadline=t, spectral_eff=7.0)
+            for i, t in enumerate(taus)]
+
+
+def _tau_prime(taus):
+    return {i: t for i, t in enumerate(taus)}
+
+
+def _offset_score(plan, taus, offsets):
+    doomed = {i for i, (t, o) in enumerate(zip(taus, offsets))
+              if o > 0 and t < 0}
+    return float(np.mean([
+        QUALITY.fid(0) if i in doomed
+        else QUALITY.fid(offsets[i] + plan.steps_completed.get(i, 0))
+        for i in range(len(taus))]))
+
+
+taus_strategy = st.lists(
+    st.floats(min_value=0.05, max_value=30.0, allow_nan=False,
+              allow_infinity=False),
+    min_size=1, max_size=12)
+
+
+@settings(max_examples=40, deadline=None)
+@given(taus=taus_strategy)
+def test_zero_offsets_identical_mean_fid_to_stacking(taus):
+    """The tentpole equivalence invariant, property-tested."""
+    svcs = _services(taus)
+    tp = _tau_prime(taus)
+    a = stacking(svcs, tp, DELAY, QUALITY)
+    b = stacking_offset.plan(svcs, tp, DELAY, QUALITY,
+                             [0] * len(taus))
+    qa = QUALITY.mean_fid([a.steps_completed[i]
+                           for i in range(len(taus))])
+    qb = QUALITY.mean_fid([b.steps_completed[i]
+                           for i in range(len(taus))])
+    assert qa == qb
+    b.validate(gen_deadlines=tp)
+
+
+@settings(max_examples=30, deadline=None)
+@given(taus=taus_strategy,
+       data=st.data())
+def test_offset_plans_satisfy_constraints(taus, data):
+    """(1),(2),(6),(7),(14) hold for arbitrary offsets too."""
+    offsets = data.draw(st.lists(st.integers(0, 25),
+                                 min_size=len(taus),
+                                 max_size=len(taus)))
+    svcs = _services(taus)
+    tp = _tau_prime(taus)
+    plan = stacking_offset.plan(svcs, tp, DELAY, QUALITY, offsets)
+    plan.validate(gen_deadlines=tp)
+
+
+@settings(max_examples=30, deadline=None)
+@given(taus=taus_strategy, data=st.data())
+def test_never_scores_worse_than_shared_horizon(taus, data):
+    """stacking_offset's candidate set contains Algorithm 1's, scored
+    under the same progress-aware objective — so it can't lose."""
+    offsets = data.draw(st.lists(st.integers(0, 25),
+                                 min_size=len(taus),
+                                 max_size=len(taus)))
+    svcs = _services(taus)
+    tp = _tau_prime(taus)
+    native = stacking_offset.plan(svcs, tp, DELAY, QUALITY, offsets)
+    shared = stacking(svcs, tp, DELAY, QUALITY)
+    assert _offset_score(native, taus, offsets) <= \
+        _offset_score(shared, taus, offsets) + 1e-9
