@@ -20,10 +20,16 @@ cell, both mean FIDs with outage in the derived column, plus:
 Deadline windows are the churn regime (tight deadlines = every arrival
 really contends with the in-flight plan); with the paper's loose 7-20 s
 window the two replanners almost always tie — see docs/SCENARIOS.md.
+
+Every (scheduler, rate, window, seed) cell is an independent seeded
+simulation, so ``run(..., workers=N)`` (the ``benchmarks.run
+--workers`` flag) fans the grid out over N processes with
+byte-identical output (``benchmarks/par.py``).
 """
 
 import numpy as np
 
+from benchmarks.par import parallel_map
 from repro.api import MultiServerProvisioner, OnlineProvisioner
 from repro.core.service import make_scenario
 
@@ -33,46 +39,54 @@ SCHEMES = [("stacking", "stacking"), ("offset", "stacking_offset")]
 WINDOWS = [("tight", (3.0, 8.0)), ("med", (5.0, 12.0))]
 
 
-def _mean_stats(scheduler, rate, K, seeds, tau):
-    fids, outs = [], []
-    for seed in seeds:
-        scn = make_scenario(K=K, tau_min=tau[0], tau_max=tau[1],
-                            arrival_rate=rate, seed=seed)
-        rep = OnlineProvisioner(scn, scheduler=scheduler,
-                                allocator="inv_se").run()
-        fids.append(rep.mean_fid)
-        outs.append(rep.outage_rate)
-    return float(np.mean(fids)), float(np.mean(outs))
+def _single_cell(args):
+    """One (scheduler, rate, seed, window) online run -> (fid, outage).
+    Module-level so ProcessPoolExecutor can pickle it."""
+    scheduler, rate, K, seed, tau = args
+    scn = make_scenario(K=K, tau_min=tau[0], tau_max=tau[1],
+                        arrival_rate=rate, seed=seed)
+    rep = OnlineProvisioner(scn, scheduler=scheduler,
+                            allocator="inv_se").run()
+    return rep.mean_fid, rep.outage_rate
 
 
-def _multi_stats(scheduler, rate, K, seeds, tau, n_servers, handoff):
-    fids, outs, hos, admitted = [], [], [], 0
-    for seed in seeds:
-        scn = make_scenario(K=K, n_servers=n_servers, arrival_rate=rate,
-                            tau_min=tau[0], tau_max=tau[1],
-                            server_speed_range=(0.6, 1.4), seed=seed)
-        rep = MultiServerProvisioner(scn, scheduler=scheduler,
-                                     allocator="inv_se"
-                                     ).run_online(handoff=handoff)
-        fids.append(rep.mean_fid)
-        outs.append(rep.outage_rate)
-        hos.append(rep.handoffs)
-        admitted += len(rep.result.outcomes)
-    return (float(np.mean(fids)), float(np.mean(outs)),
-            int(np.sum(hos)), admitted)
+def _multi_cell(args):
+    """One multi-server online run -> (fid, outage, handoffs, admitted)."""
+    scheduler, rate, K, seed, tau, n_servers, handoff = args
+    scn = make_scenario(K=K, n_servers=n_servers, arrival_rate=rate,
+                        tau_min=tau[0], tau_max=tau[1],
+                        server_speed_range=(0.6, 1.4), seed=seed)
+    rep = MultiServerProvisioner(scn, scheduler=scheduler,
+                                 allocator="inv_se"
+                                 ).run_online(handoff=handoff)
+    return (rep.mean_fid, rep.outage_rate, rep.handoffs,
+            len(rep.result.result.outcomes))
 
 
 def run(csv_rows, rates=(0.5, 1.0, 2.0, 4.0), K=12,
         seeds=tuple(range(8)), multi_rates=(1.0, 2.0),
-        multi_seeds=(0, 1, 2), n_servers=3):
+        multi_seeds=(0, 1, 2), n_servers=3, workers=1):
     dominated, strict = True, False
 
     # -- single-server: rate x deadline-window grid -----------------------
+    # results are keyed by their (unique) task tuple so aggregation
+    # cannot silently mis-attribute cells if a loop nesting changes
+    single_tasks = [(sched, rate, K, seed, tau)
+                    for _, tau in WINDOWS
+                    for rate in rates
+                    for _, sched in SCHEMES
+                    for seed in seeds]
+    single_res = dict(zip(single_tasks,
+                          parallel_map(_single_cell, single_tasks,
+                                       workers)))
     for wlabel, tau in WINDOWS:
         for rate in rates:
             cell = {}
             for label, sched in SCHEMES:
-                fid, out = _mean_stats(sched, rate, K, seeds, tau)
+                stats = [single_res[(sched, rate, K, seed, tau)]
+                         for seed in seeds]
+                fid = float(np.mean([f for f, _ in stats]))
+                out = float(np.mean([o for _, o in stats]))
                 cell[label] = fid
                 csv_rows.append((f"churn_{wlabel}_r{rate}_{label}", fid,
                                  f"outage={out:.3f},tau={tau[0]:g}-"
@@ -80,13 +94,25 @@ def run(csv_rows, rates=(0.5, 1.0, 2.0, 4.0), K=12,
             dominated &= cell["offset"] <= cell["stacking"] + 1e-9
             strict |= cell["offset"] < cell["stacking"] - 1e-9
 
-    # -- multi-server: per-track replans, no handoff ----------------------
+    # -- multi-server: per-track replans, with and without handoff --------
     tau = WINDOWS[0][1]
+    ho_rate = multi_rates[0]
+    multi_tasks = [(sched, rate, K, seed, tau, n_servers, False)
+                   for rate in multi_rates
+                   for _, sched in SCHEMES
+                   for seed in multi_seeds]
+    multi_tasks += [("stacking_offset", ho_rate, K, seed, tau, n_servers,
+                     True) for seed in multi_seeds]
+    multi_res = dict(zip(multi_tasks,
+                         parallel_map(_multi_cell, multi_tasks,
+                                      workers)))
     multi = {}
     for rate in multi_rates:
         for label, sched in SCHEMES:
-            fid, out, _, _ = _multi_stats(sched, rate, K, multi_seeds,
-                                          tau, n_servers, handoff=False)
+            stats = [multi_res[(sched, rate, K, seed, tau, n_servers,
+                                False)] for seed in multi_seeds]
+            fid = float(np.mean([f for f, _, _, _ in stats]))
+            out = float(np.mean([o for _, o, _, _ in stats]))
             multi[(rate, label)] = fid
             csv_rows.append((f"churn_multi_r{rate}_{label}", fid,
                              f"outage={out:.3f},servers={n_servers}"))
@@ -101,10 +127,12 @@ def run(csv_rows, rates=(0.5, 1.0, 2.0, 4.0), K=12,
                      "< in >=1"))
 
     # -- cross-cell handoff ------------------------------------------------
-    ho_rate = multi_rates[0]
-    fid_ho, out_ho, handoffs, admitted = _multi_stats(
-        "stacking_offset", ho_rate, K, multi_seeds, tau, n_servers,
-        handoff=True)
+    ho_stats = [multi_res[("stacking_offset", ho_rate, K, seed, tau,
+                           n_servers, True)] for seed in multi_seeds]
+    fid_ho = float(np.mean([f for f, _, _, _ in ho_stats]))
+    out_ho = float(np.mean([o for _, o, _, _ in ho_stats]))
+    handoffs = int(np.sum([h for _, _, h, _ in ho_stats]))
+    admitted = int(np.sum([n for _, _, _, n in ho_stats]))
     fid_no = multi[(ho_rate, "offset")]
     csv_rows.append((f"churn_multi_r{ho_rate}_offset_handoff", fid_ho,
                      f"outage={out_ho:.3f},handoffs={handoffs}"))

@@ -10,10 +10,16 @@ two ordering flags:
   * ``multiserver_scaleout_ok``     — 1 when 3 cells serve the same
     demand (same total bandwidth, 3x the compute) at no worse mean FID
     and outage than 1 server — the scale-out axis actually paying off.
+
+Every (placement, seed) cell is an independent seeded run, so
+``run(..., workers=N)`` (the ``benchmarks.run --workers`` flag) fans
+the grid out over N processes with byte-identical output
+(``benchmarks/par.py``).
 """
 
 import numpy as np
 
+from benchmarks.par import parallel_map
 from repro.api import MultiServerProvisioner, Provisioner
 from repro.core.service import make_scenario
 
@@ -28,28 +34,58 @@ PLACEMENTS = [("rr", "round_robin", None, "inv_se", None),
                dict(rounds=1))]
 
 
-def _mean_stats(placement, kw, K, n_servers, seeds, speed=(0.6, 1.4),
-                allocator="inv_se", allocator_kwargs=None):
-    fids, outs = [], []
-    for seed in seeds:
-        scn = make_scenario(K=K, n_servers=n_servers,
-                            server_speed_range=speed, seed=seed)
-        rep = MultiServerProvisioner(scn, placement=placement,
-                                     scheduler="stacking",
-                                     allocator=allocator,
-                                     placement_kwargs=kw,
-                                     allocator_kwargs=allocator_kwargs
-                                     ).run()
-        fids.append(rep.mean_fid)
-        outs.append(rep.outage_rate)
-    return float(np.mean(fids)), float(np.mean(outs))
+def _placement_cell(args):
+    """One (placement, seed) static multi-server run -> (fid, outage)."""
+    placement, kw, K, n_servers, seed, speed, allocator, alloc_kw = args
+    scn = make_scenario(K=K, n_servers=n_servers,
+                        server_speed_range=speed, seed=seed)
+    rep = MultiServerProvisioner(scn, placement=placement,
+                                 scheduler="stacking",
+                                 allocator=allocator,
+                                 placement_kwargs=kw,
+                                 allocator_kwargs=alloc_kw).run()
+    return rep.mean_fid, rep.outage_rate
 
 
-def run(csv_rows, K=12, n_servers=3, seeds=(0, 1)):
+def _scaleout_cell(args):
+    """1-server vs 3-cell run on the same demand -> (fid1, out1, fid3,
+    out3)."""
+    K, n_servers, seed = args
+    r1 = Provisioner(make_scenario(K=K, seed=seed),
+                     scheduler="stacking", allocator="inv_se").run()
+    r3 = MultiServerProvisioner(
+        make_scenario(K=K, n_servers=n_servers, seed=seed),
+        placement="least_loaded", scheduler="stacking",
+        allocator="inv_se").run()
+    return r1.mean_fid, r1.outage_rate, r3.mean_fid, r3.outage_rate
+
+
+def _online_cell(args):
+    """One online multi-server run -> (fid, outage)."""
+    K, n_servers, seed = args
+    scn = make_scenario(K=K, n_servers=n_servers, arrival_rate=1.0,
+                        server_speed_range=(0.6, 1.4), seed=seed)
+    rep = MultiServerProvisioner(scn, scheduler="stacking",
+                                 allocator="inv_se").run_online()
+    return rep.mean_fid, rep.outage_rate
+
+
+def run(csv_rows, K=12, n_servers=3, seeds=(0, 1), workers=1):
+    # tasks carry their (placement, seed) identity; results are looked
+    # up by it so aggregation cannot mis-attribute cells if a loop
+    # nesting changes
+    tasks = [(placement, kw, K, n_servers, seed, (0.6, 1.4), alloc,
+              alloc_kw)
+             for _, placement, kw, alloc, alloc_kw in PLACEMENTS
+             for seed in seeds]
+    res = {(t[0], t[4]): r
+           for t, r in zip(tasks, parallel_map(_placement_cell, tasks,
+                                               workers))}
     stats = {}
-    for label, placement, kw, alloc, alloc_kw in PLACEMENTS:
-        fid, out = _mean_stats(placement, kw, K, n_servers, seeds,
-                               allocator=alloc, allocator_kwargs=alloc_kw)
+    for label, placement, _, alloc, _ in PLACEMENTS:
+        cells = [res[(placement, seed)] for seed in seeds]
+        fid = float(np.mean([f for f, _ in cells]))
+        out = float(np.mean([o for _, o in cells]))
         stats[label] = (fid, out)
         csv_rows.append((f"multiserver_{label}", fid,
                          f"outage={out:.3f},allocator={alloc}"))
@@ -63,20 +99,12 @@ def run(csv_rows, K=12, n_servers=3, seeds=(0, 1)):
     # server vs 3 cells (a third of the bandwidth but its own compute
     # each) — tripled compute means more denoising steps inside the same
     # deadlines, so quality must not get worse
-    fid1s, fid3s, out1s, out3s = [], [], [], []
-    for seed in seeds:
-        r1 = Provisioner(make_scenario(K=K, seed=seed),
-                         scheduler="stacking", allocator="inv_se").run()
-        r3 = MultiServerProvisioner(
-            make_scenario(K=K, n_servers=n_servers, seed=seed),
-            placement="least_loaded", scheduler="stacking",
-            allocator="inv_se").run()
-        fid1s.append(r1.mean_fid)
-        fid3s.append(r3.mean_fid)
-        out1s.append(r1.outage_rate)
-        out3s.append(r3.outage_rate)
-    fid1, fid3 = float(np.mean(fid1s)), float(np.mean(fid3s))
-    out1, out3 = float(np.mean(out1s)), float(np.mean(out3s))
+    so = parallel_map(_scaleout_cell,
+                      [(K, n_servers, seed) for seed in seeds], workers)
+    fid1 = float(np.mean([f1 for f1, _, _, _ in so]))
+    out1 = float(np.mean([o1 for _, o1, _, _ in so]))
+    fid3 = float(np.mean([f3 for _, _, f3, _ in so]))
+    out3 = float(np.mean([o3 for _, _, _, o3 in so]))
     csv_rows.append(("multiserver_1srv_fid", fid1, f"outage={out1:.3f}"))
     csv_rows.append(("multiserver_3srv_fid", fid3, f"outage={out3:.3f}"))
     csv_rows.append(("multiserver_scaleout_ok",
@@ -84,14 +112,8 @@ def run(csv_rows, K=12, n_servers=3, seeds=(0, 1)):
                      "1=3 cells no worse than 1 server (FID, outage)"))
 
     # online: Poisson arrivals routed per-arrival across the cells
-    on_fids, on_outs = [], []
-    for seed in seeds:
-        scn = make_scenario(K=K, n_servers=n_servers, arrival_rate=1.0,
-                            server_speed_range=(0.6, 1.4), seed=seed)
-        rep = MultiServerProvisioner(scn, scheduler="stacking",
-                                     allocator="inv_se").run_online()
-        on_fids.append(rep.mean_fid)
-        on_outs.append(rep.outage_rate)
+    on = parallel_map(_online_cell,
+                      [(K, n_servers, seed) for seed in seeds], workers)
     csv_rows.append(("multiserver_online_earliest_free",
-                     float(np.mean(on_fids)),
-                     f"outage={float(np.mean(on_outs)):.3f}"))
+                     float(np.mean([f for f, _ in on])),
+                     f"outage={float(np.mean([o for _, o in on])):.3f}"))

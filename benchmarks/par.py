@@ -1,0 +1,28 @@
+"""Process-parallel fan-out for benchmark grids.
+
+``parallel_map(fn, items, workers)`` runs ``fn`` over ``items`` in a
+``ProcessPoolExecutor`` when ``workers > 1`` and serially otherwise,
+always returning results in item order — so a suite's output is
+byte-identical at any worker count (every grid cell is an independent,
+seeded simulation).  ``fn`` must be a module-level function and every
+item picklable (the suites pass registry *names*, not callables).
+
+Wired into ``benchmarks/run.py --workers N``: suites whose ``run``
+accepts a ``workers`` keyword (churn, multiserver) fan their
+rate x deadline x seed grids out across cores.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Sequence
+
+
+def parallel_map(fn: Callable, items: Sequence, workers: int = 1) -> List:
+    """``[fn(x) for x in items]``, fanned out over ``workers``
+    processes when that actually buys anything."""
+    items = list(items)
+    if workers <= 1 or len(items) <= 1:
+        return [fn(x) for x in items]
+    from concurrent.futures import ProcessPoolExecutor
+    with ProcessPoolExecutor(max_workers=min(workers, len(items))) as ex:
+        return list(ex.map(fn, items))

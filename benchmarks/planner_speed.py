@@ -1,0 +1,101 @@
+"""Planner speed suite: array-native engine vs the scalar reference.
+
+Times the planning hot paths under both engines on identical inputs
+(docs/PERFORMANCE.md):
+
+  * ``planner_tstar_K{N}_*`` — the full Algorithm-1 T* search
+    (``stacking``) at N services, scalar vs vec, plus the speedup;
+  * ``planner_offset_K{N}_*`` — one offset-native replan
+    (``StackingOffset.plan`` with synthetic progress), scalar vs vec;
+  * ``planner_vec_speedup_5x`` — gated flag: the vec engine is at
+    least 5x faster on the T* search at N >= 64 services (the ISSUE-5
+    acceptance bar; pinned at 1 in ``baseline.json``);
+  * ``planner_vec_equivalent`` — gated flag: on every timed scenario
+    the two engines returned bit-identical plans (batches, start
+    times, step counts).  Timing varies per machine; equivalence must
+    not, so only the flags are gated, the ``*_ms`` rows are trend data
+    for the nightly baseline refresh.
+"""
+
+import time
+
+import numpy as np
+
+from repro.core.delay_model import DelayModel
+from repro.core.offset import StackingOffset
+from repro.core.quality_model import PowerLawFID
+from repro.core.service import make_scenario
+from repro.core.stacking import stacking
+
+GATE_K = 64          # the acceptance bar's "N >= 64 services" instance
+GATE_SPEEDUP = 5.0
+
+
+def _best_of(fn, reps: int) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _plans_equal(a, b) -> bool:
+    return (a.batches == b.batches and a.start_times == b.start_times
+            and a.steps_completed == b.steps_completed)
+
+
+def run(csv_rows, sizes=(16, 64, 128, 256), reps=3):
+    delay, quality = DelayModel(), PowerLawFID()
+    equivalent = True
+    gate_speedup = 0.0
+
+    # -- the Algorithm-1 T* search, scalar vs vec -------------------------
+    for K in sizes:
+        scn = make_scenario(K=K, seed=0)
+        tp = {s.id: s.deadline - 0.4 for s in scn.services}
+        svcs = scn.services
+        equivalent &= _plans_equal(
+            stacking(svcs, tp, delay, quality, engine="scalar"),
+            stacking(svcs, tp, delay, quality, engine="vec"))
+        t_sc = _best_of(lambda: stacking(svcs, tp, delay, quality,
+                                         engine="scalar"), reps)
+        t_ve = _best_of(lambda: stacking(svcs, tp, delay, quality,
+                                         engine="vec"), reps)
+        speedup = t_sc / max(t_ve, 1e-12)
+        csv_rows.append((f"planner_tstar_K{K}_scalar_ms", t_sc * 1e3,
+                         "Alg-1 T* search, scalar reference"))
+        csv_rows.append((f"planner_tstar_K{K}_vec_ms", t_ve * 1e3,
+                         "Alg-1 T* search, array-native"))
+        csv_rows.append((f"planner_tstar_K{K}_speedup", speedup,
+                         "scalar_ms / vec_ms"))
+        if K == GATE_K:
+            gate_speedup = speedup
+
+    # -- one offset-native replan (three candidate families) -------------
+    K = GATE_K
+    scn = make_scenario(K=K, tau_min=3.0, tau_max=8.0, seed=1)
+    tp = {s.id: s.deadline - 0.4 for s in scn.services}
+    offs = [int(x) for x in np.random.default_rng(0).integers(0, 6, K)]
+    scalar_off, vec_off = StackingOffset("scalar"), StackingOffset("vec")
+    equivalent &= _plans_equal(
+        scalar_off.plan(scn.services, tp, delay, quality, offs),
+        vec_off.plan(scn.services, tp, delay, quality, offs))
+    t_sc = _best_of(lambda: scalar_off.plan(scn.services, tp, delay,
+                                            quality, offs), reps)
+    t_ve = _best_of(lambda: vec_off.plan(scn.services, tp, delay,
+                                         quality, offs), reps)
+    csv_rows.append((f"planner_offset_K{K}_scalar_ms", t_sc * 1e3,
+                     "offset replan, scalar reference"))
+    csv_rows.append((f"planner_offset_K{K}_vec_ms", t_ve * 1e3,
+                     "offset replan, array-native"))
+    csv_rows.append((f"planner_offset_K{K}_speedup",
+                     t_sc / max(t_ve, 1e-12), "scalar_ms / vec_ms"))
+
+    csv_rows.append(("planner_vec_speedup_5x",
+                     float(gate_speedup >= GATE_SPEEDUP),
+                     f"1=vec >= {GATE_SPEEDUP:g}x on T* search at "
+                     f"K={GATE_K} (got {gate_speedup:.1f}x)"))
+    csv_rows.append(("planner_vec_equivalent", float(equivalent),
+                     "1=vec plans bit-identical to scalar on every "
+                     "timed scenario"))

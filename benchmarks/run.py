@@ -1,21 +1,27 @@
 """Benchmark driver: one module per paper figure/table plus the
-roofline, online-admission, multi-server and beyond-paper suites.
-Prints ``name,us_per_call,derived`` CSV.
+roofline, online-admission, multi-server, churn, planner-speed and
+beyond-paper suites.  Prints ``name,us_per_call,derived`` CSV.
 
-    python -m benchmarks.run [--only fig1a,fig2b,online,multiserver,...]
+    python -m benchmarks.run [--only fig1a,fig2b,online,planner_speed,..]
     python -m benchmarks.run --list
-    python -m benchmarks.run --only api,online --json bench-artifacts/
+    python -m benchmarks.run --only churn --workers 4 --json out/
 
 (run from the repo root; ``benchmarks/__init__.py`` puts ``src`` on the
 path, so no ``PYTHONPATH`` prefix is needed)
 
+``--workers N`` fans grid suites (churn, multiserver — any suite whose
+``run`` takes a ``workers`` keyword) out over N processes; results are
+byte-identical at any worker count (benchmarks/par.py).
+
 ``--json DIR`` additionally writes one machine-readable
-``BENCH_<suite>.json`` per suite (rows + git SHA + wall time); CI
-uploads these as artifacts and ``benchmarks/compare.py`` gates them
-against the committed ``benchmarks/baseline.json``.
+``BENCH_<suite>.json`` per suite (rows + git SHA + per-suite wall time
++ worker count); CI uploads these as artifacts and
+``benchmarks/compare.py`` gates them against the committed
+``benchmarks/baseline.json``.
 """
 
 import argparse
+import inspect
 import json
 import subprocess
 import sys
@@ -26,7 +32,8 @@ from benchmarks import (ablations, beyond_paper, churn,
                         fig1a_delay_vs_batch, fig1b_fid_vs_steps,
                         fig2a_e2e_delay, fig2b_fid_vs_services,
                         fig2c_fid_vs_min_delay, kernels_bench,
-                        multiserver, online_admission, roofline_report)
+                        multiserver, online_admission, planner_speed,
+                        roofline_report)
 
 
 def api_suite(rows):
@@ -63,6 +70,7 @@ SUITES = {
     "online": online_admission.run,
     "multiserver": multiserver.run,
     "churn": churn.run,
+    "planner_speed": planner_speed.run,
     "roofline": roofline_report.run,
     "kernels": kernels_bench.run,
     "beyond": beyond_paper.run,
@@ -82,13 +90,16 @@ def git_sha() -> str:
 
 
 def write_json(out_dir: Path, suite: str, rows, elapsed_s: float,
-               sha: str) -> Path:
+               sha: str, workers: int = 1) -> Path:
     out_dir.mkdir(parents=True, exist_ok=True)
     path = out_dir / f"BENCH_{suite}.json"
     payload = {
         "suite": suite,
         "git_sha": sha,
+        # per-suite wall time + worker count so nightly baseline
+        # refreshes capture planner/suite speed trends, not just FIDs
         "elapsed_s": round(elapsed_s, 3),
+        "workers": workers,
         "rows": [{"name": n, "value": v, "derived": d}
                  for n, v, d in rows],
     }
@@ -104,6 +115,9 @@ def main(argv=None) -> None:
                     help="print available suite names and exit")
     ap.add_argument("--json", metavar="DIR", default=None,
                     help="also write one BENCH_<suite>.json per suite")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="process-parallel fan-out for grid suites "
+                         "(churn, multiserver); 1 = serial")
     args = ap.parse_args(argv)
     if args.list:
         print("\n".join(SUITES))
@@ -116,15 +130,23 @@ def main(argv=None) -> None:
     for name in names:
         t0 = time.time()
         before = len(rows)
+        fn = SUITES[name]
+        kwargs = {}
+        if args.workers > 1 and \
+                "workers" in inspect.signature(fn).parameters:
+            kwargs["workers"] = args.workers
         try:
-            SUITES[name](rows)
+            fn(rows, **kwargs)
         except Exception as e:   # noqa: BLE001
             rows.append((f"{name}_ERROR", 0.0, repr(e)[:120]))
         elapsed = time.time() - t0
         for r in rows[before:]:
             print(f"{r[0]},{r[1]:.4f},{r[2]}")
         if args.json:
-            write_json(Path(args.json), name, rows[before:], elapsed, sha)
+            # record the worker count THIS suite actually ran with —
+            # suites without a workers kwarg executed serially
+            write_json(Path(args.json), name, rows[before:], elapsed,
+                       sha, workers=kwargs.get("workers", 1))
         print(f"# {name} done in {elapsed:.1f}s", file=sys.stderr)
 
 

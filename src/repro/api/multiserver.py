@@ -155,7 +155,11 @@ class MultiServerProvisioner:
                  delay: Optional[DelayModel] = None,
                  quality: Optional[QualityModel] = None,
                  placement_kwargs: Optional[dict] = None,
-                 allocator_kwargs: Optional[dict] = None):
+                 allocator_kwargs: Optional[dict] = None,
+                 engine: Optional[str] = None):
+        # engine: planning-engine pin for every cell's plans/replans
+        # ("vec"/"scalar", repro.core.arrays; None = process default)
+        self.engine = engine
         self.scenario = scenario
         self.placement_name = display_name(placement)
         self.scheduler_name = display_name(scheduler)
@@ -193,7 +197,8 @@ class MultiServerProvisioner:
         assignment = np.asarray(assignment)
         multi: MultiSimResult = provision_multi(
             self.scenario, assignment, self.scheduler, self._allocator(),
-            self.delay, self.quality, validate=validate)
+            self.delay, self.quality, validate=validate,
+            engine=self.engine)
         reports, server_ids = [], []
         for rep in multi.per_server:
             reports.append(ProvisionReport(
@@ -239,7 +244,7 @@ class MultiServerProvisioner:
             self.scenario, self.scheduler, self._allocator(),
             delay=self.delay, quality=self.quality, admission=adm,
             placement=online_placement, handoff=handoff,
-            validate=validate)
+            validate=validate, engine=self.engine)
         return MultiOnlineReport(
             scenario=self.scenario, result=result,
             placement_name=(display_name(online_placement)

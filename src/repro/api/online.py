@@ -119,7 +119,11 @@ class OnlineProvisioner:
                  delay: Optional[DelayModel] = None,
                  quality: Optional[QualityModel] = None,
                  allocator_kwargs: Optional[dict] = None,
-                 admission_kwargs: Optional[dict] = None):
+                 admission_kwargs: Optional[dict] = None,
+                 engine: Optional[str] = None):
+        # engine: planning-engine pin for every replan of a run
+        # ("vec"/"scalar", repro.core.arrays; None = process default)
+        self.engine = engine
         self.scenario = scenario
         self.scheduler_name = display_name(scheduler)
         self.allocator_name = display_name(allocator)
@@ -144,7 +148,7 @@ class OnlineProvisioner:
         result = simulate_online(
             self.scenario, self.scheduler, allocator,
             delay=self.delay, quality=self.quality,
-            admission=admission, validate=validate)
+            admission=admission, validate=validate, engine=self.engine)
         return OnlineReport(
             scenario=self.scenario, result=result, delay=self.delay,
             quality=self.quality, scheduler_name=self.scheduler_name,

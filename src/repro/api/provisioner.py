@@ -96,7 +96,11 @@ class Provisioner:
                  scheduler="stacking", allocator="pso",
                  delay: Optional[DelayModel] = None,
                  quality: Optional[QualityModel] = None,
-                 allocator_kwargs: Optional[dict] = None):
+                 allocator_kwargs: Optional[dict] = None,
+                 engine: Optional[str] = None):
+        # engine: planning-engine pin for this facade's P1/P2 stages
+        # ("vec"/"scalar", repro.core.arrays; None = process default)
+        self.engine = engine
         self.scenario = scenario
         self.scheduler_name = display_name(scheduler)
         self.allocator_name = display_name(allocator)
@@ -116,14 +120,18 @@ class Provisioner:
     # -- pipeline stages ------------------------------------------------
     def allocate(self) -> np.ndarray:
         """P1: bandwidth allocation under the current delay/quality."""
-        return np.asarray(self.allocator(
-            self.scenario, self.scheduler, self.delay, self.quality,
-            **self.allocator_kwargs))
+        from repro.core import arrays
+        with arrays.engine_scope(self.engine):
+            return np.asarray(self.allocator(
+                self.scenario, self.scheduler, self.delay, self.quality,
+                **self.allocator_kwargs))
 
     def plan(self, alloc: np.ndarray) -> Tuple[Dict[int, float], BatchPlan]:
         """P2: generation budgets + batch plan under an allocation."""
-        return make_plan(self.scenario, alloc, self.scheduler, self.delay,
-                         self.quality)
+        from repro.core import arrays
+        with arrays.engine_scope(self.engine):
+            return make_plan(self.scenario, alloc, self.scheduler,
+                             self.delay, self.quality)
 
     def calibrate(self, key=None, **kw) -> DelayModel:
         """Measure the workload's real g(X) and adopt it for planning."""

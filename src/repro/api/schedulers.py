@@ -7,6 +7,12 @@ All share the uniform ``Scheduler`` signature
 ``(services, tau_prime, delay, quality) -> BatchPlan``;
 ``stacking_offset`` additionally satisfies ``OffsetScheduler`` (a
 ``plan(..., offsets)`` method the online replanner dispatches to).
+
+Engine note (docs/PERFORMANCE.md): ``stacking``, ``equal_steps`` and
+``stacking_offset`` dispatch to the array-native engine
+(``repro.core.arrays``) by default; the ``*_scalar`` entries pin the
+reference per-level loops — bit-identical plans, kept as ground truth
+and for the ``planner_speed`` benchmark's baseline side.
 """
 
 from __future__ import annotations
@@ -14,10 +20,11 @@ from __future__ import annotations
 from typing import Dict, Sequence
 
 from repro.api.registry import register_scheduler
+from repro.core import arrays
 from repro.core.baselines import (fixed_size_batching, greedy_batching,
                                   single_instance)
 from repro.core.delay_model import DelayModel
-from repro.core.offset import stacking_offset
+from repro.core.offset import StackingOffset, stacking_offset
 from repro.core.optimal import optimal_plan
 from repro.core.plan import BatchPlan
 from repro.core.quality_model import QualityModel
@@ -33,6 +40,19 @@ register_scheduler("optimal", optimal_plan)
 # (zero offsets delegate), offset-native under online replanning
 register_scheduler("stacking_offset", stacking_offset,
                    aliases=("offset",))
+# engine-pinned reference entries (scalar ground-truth paths)
+register_scheduler("stacking_offset_scalar", StackingOffset("scalar"),
+                   aliases=("offset_scalar",))
+
+
+@register_scheduler("stacking_scalar")
+def stacking_scalar(services: Sequence[ServiceRequest],
+                    tau_prime: Dict[int, float], delay: DelayModel,
+                    quality: QualityModel) -> BatchPlan:
+    """Algorithm 1 pinned to the scalar reference loop — what the
+    array-native engine is tested against and what
+    ``benchmarks/planner_speed.py`` measures the speedup over."""
+    return stacking(services, tau_prime, delay, quality, engine="scalar")
 
 
 @register_scheduler("equal_steps")
@@ -42,7 +62,10 @@ def equal_steps(services: Sequence[ServiceRequest],
     """Balanced baseline: every service targets the *same* step count T*,
     batched together each step; T* searched like Algorithm 1's outer loop.
     Isolates the paper's insight (ii) — balanced step counts — from its
-    clustering/packing machinery."""
+    clustering/packing machinery.  Dispatches to the array-native
+    lockstep sweep unless the scalar engine is selected."""
+    if arrays.get_engine() == "vec":
+        return arrays.equal_steps_vec(services, tau_prime, delay, quality)
     ids = [s.id for s in services]
     feasible = [k for k in ids if delay.max_steps(tau_prime[k]) > 0]
     t_max = max([delay.max_steps(tau_prime[k]) for k in feasible],

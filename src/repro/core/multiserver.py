@@ -29,6 +29,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core import arrays
 from repro.core.bandwidth import evaluate, make_plan
 from repro.core.delay_model import DelayModel
 from repro.core.online import (AdmissionDecision, AdmissionFn, AllocatorFn,
@@ -115,30 +116,37 @@ def _merge_outcomes(scn: Scenario,
 def provision_multi(scn: Scenario, assignment: Sequence[int], scheduler,
                     allocator, delay: Optional[DelayModel] = None,
                     quality: Optional[QualityModel] = None,
-                    validate: bool = True) -> MultiSimResult:
+                    validate: bool = True,
+                    engine: Optional[str] = None) -> MultiSimResult:
     """Static multi-server pipeline: per-cell allocate -> plan ->
     simulate under a given placement.
 
     ``delay`` is the baseline hardware model; each cell plans with its
     speed-scaled version (``EdgeServer.delay_model``).  With one server
     and the identity assignment this is exactly the single-server
-    ``run_scheme`` composition.
+    ``run_scheme`` composition.  ``engine`` pins the planning engine
+    for every cell's plan (``repro.core.arrays``; ``None`` = process
+    default).
     """
     delay = delay if delay is not None else DelayModel()
     quality = quality if quality is not None else PowerLawFID()
     subs = split_scenario(scn, assignment)
     per_server = []
-    for server, sub in zip(scn.server_list, subs):
-        if not sub.services:
-            continue
-        cell_delay = server.delay_model(delay)
-        alloc = np.asarray(allocator(sub, scheduler, cell_delay, quality))
-        tp, plan = make_plan(sub, alloc, scheduler, cell_delay, quality)
-        if validate:
-            plan.validate(gen_deadlines=tp)
-        per_server.append(ServerPlanReport(
-            server=server, scenario=sub, allocation=alloc, tau_prime=tp,
-            plan=plan, sim=simulate(sub, alloc, plan, quality)))
+    with arrays.engine_scope(engine):
+        for server, sub in zip(scn.server_list, subs):
+            if not sub.services:
+                continue
+            cell_delay = server.delay_model(delay)
+            alloc = np.asarray(allocator(sub, scheduler, cell_delay,
+                                         quality))
+            tp, plan = make_plan(sub, alloc, scheduler, cell_delay,
+                                 quality)
+            if validate:
+                plan.validate(gen_deadlines=tp)
+            per_server.append(ServerPlanReport(
+                server=server, scenario=sub, allocation=alloc,
+                tau_prime=tp, plan=plan,
+                sim=simulate(sub, alloc, plan, quality)))
     outcomes = _merge_outcomes(scn, per_server)
     mean_fid = float(np.mean([o.fid for o in outcomes]))
     outage = float(np.mean([0.0 if o.met_deadline else 1.0
@@ -400,7 +408,9 @@ def simulate_online_multi(scn: Scenario, scheduler,
                           admission: Optional[AdmissionFn] = None,
                           placement: Optional[OnlinePlacementFn] = None,
                           handoff: bool = False,
-                          validate: bool = True) -> MultiOnlineResult:
+                          validate: bool = True,
+                          engine: Optional[str] = None
+                          ) -> MultiOnlineResult:
     """Event-driven arrivals over M edge cells (module docstring).
 
     ``placement`` routes each arrival to a server (default
@@ -411,7 +421,9 @@ def simulate_online_multi(scn: Scenario, scheduler,
     outcome (``MultiOnlineResult.handoffs`` counts the moves).  With
     ``scn.n_servers == 1`` any placement (and the handoff pass, which
     has no other cell to probe) degenerates to the single-server
-    ``simulate_online`` path bit-for-bit.
+    ``simulate_online`` path bit-for-bit.  ``engine`` pins the
+    planning engine for every track's replans (``repro.core.arrays``;
+    ``None`` = process default).
     """
     if admission is None:
         admission = lambda svc, projected, states: True   # noqa: E731
@@ -421,4 +433,5 @@ def simulate_online_multi(scn: Scenario, scheduler,
         quality if quality is not None else PowerLawFID(),
         admission, placement=placement, handoff=handoff,
         validate=validate)
-    return sim.run()
+    with arrays.engine_scope(engine):
+        return sim.run()

@@ -52,8 +52,11 @@ its banked steps score ``fid(0)`` — without this, retiring a service
 
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
+import numpy as np
+
+from repro.core import arrays
 from repro.core.delay_model import DelayModel
 from repro.core.online import _OffsetQuality
 from repro.core.plan import BatchPlan
@@ -139,6 +142,11 @@ class StackingOffset:
     name = "stacking_offset"
     supports_offsets = True        # the OffsetScheduler dispatch marker
 
+    def __init__(self, engine: Optional[str] = None):
+        # None = the process-wide engine (repro.core.arrays); "scalar"
+        # pins this instance to the reference per-level passes
+        self.engine = engine
+
     def __call__(self, services: Sequence[ServiceRequest],
                  tau_prime: Dict[int, float], delay: DelayModel,
                  quality: QualityModel) -> BatchPlan:
@@ -149,12 +157,14 @@ class StackingOffset:
              tau_prime: Dict[int, float], delay: DelayModel,
              quality: QualityModel,
              offsets: Sequence[int]) -> BatchPlan:
+        engine = arrays.resolve_engine(self.engine)
         ids = [s.id for s in services]
         off = {k: int(o) for k, o in zip(ids, offsets)}
         if not any(off.values()):
             # no progress anywhere: the static problem, solved by the
             # paper's Algorithm 1 bit-for-bit
-            return stacking(services, tau_prime, delay, quality)
+            return stacking(services, tau_prime, delay, quality,
+                            engine=engine)
 
         # the one source of truth for the progress-aware objective
         # (offset-shifted mean FID + doomed rule): scoring through the
@@ -164,12 +174,23 @@ class StackingOffset:
         oq = _OffsetQuality(quality, [off[k] for k in ids])
         oq.refresh_doomed(services, tau_prime)
 
+        headroom = {k: delay.max_steps(max(tau_prime[k], 0.0))
+                    for k in ids}
+        level_max = max(off[k] + headroom[k] for k in ids)
+        t_new_max = max(1, max(headroom.values()))
+        if engine == "vec":
+            return self._plan_vec(ids, tau_prime, delay, oq, off,
+                                  level_max, t_new_max)
+        return self._plan_scalar(ids, tau_prime, delay, oq, off,
+                                 level_max, t_new_max)
+
+    def _plan_scalar(self, ids, tau_prime, delay, oq, off,
+                     level_max, t_new_max) -> BatchPlan:
+        """Reference search: one scalar pass per candidate level."""
+
         def score(plan: BatchPlan) -> float:
             return oq.mean_fid([plan.steps_completed.get(k, 0)
                                 for k in ids])
-
-        headroom = {k: delay.max_steps(max(tau_prime[k], 0.0))
-                    for k in ids}
 
         # the all-retire plan: schedule nothing, transmit what is banked
         # (the water level sits below every offset) — rarely best, but
@@ -194,7 +215,6 @@ class StackingOffset:
         # deprioritization, nearly-done services sort behind the T*
         # water level but stay live (a future replan can still extend
         # them)
-        level_max = max(off[k] + headroom[k] for k in ids)
         for level in range(1, level_max + 1):
             plan = offset_stacking_pass(ids, tau_prime, delay, level, off)
             q, ms = score(plan), plan.makespan()
@@ -219,13 +239,75 @@ class StackingOffset:
         # the same objective: guarantees this scheduler never picks a
         # plan that scores worse than the _OffsetQuality-wrapped
         # `stacking` fallback would have
-        t_new_max = max(1, max(headroom.values()))
         for t_star in range(1, t_new_max + 1):
             plan = stacking_pass(ids, tau_prime, delay, t_star)
             q, ms = score(plan), plan.makespan()
             if better(q, ms):
                 best_plan, best_q, best_ms = plan, q, ms
         return best_plan
+
+    def _plan_vec(self, ids, tau_prime, delay, oq, off,
+                  level_max, t_new_max) -> BatchPlan:
+        """The same three candidate families as ``_plan_scalar``, each
+        swept as ONE batched array kernel (``repro.core.arrays``) with
+        per-round snapshots, scored row-wise under the identical
+        objective/tie rules, and only the winner's batch list replayed.
+        Bit-identical to the scalar search — tests/test_arrays.py."""
+        arr = arrays.ServiceArrays.build(ids, tau_prime, off)
+        state = {"q": oq.mean_fid([0] * len(ids)), "ms": 0.0,
+                 "pick": None}        # None = the all-retire empty plan
+
+        def consider(q: float, ms: float, pick) -> None:
+            # the scalar `better` rule: objective first, then shorter
+            # makespan among objective-equal candidates
+            if q < state["q"] - 1e-12 or \
+                    (q < state["q"] + 1e-12 and ms < state["ms"] - 1e-12):
+                state.update(q=q, ms=ms, pick=pick)
+
+        levels = np.arange(1, level_max + 1, dtype=np.int64)
+        # family 1 — Algorithm 1 clustered on TOTAL counts
+        h1: list = []
+        Tc1, ms1, _, _ = arrays._clustered_rounds(
+            arr.ids, arr.tau_prime, arr.offsets, delay, levels,
+            history=h1)
+        for i, q in enumerate(arrays.score_rows(Tc1, oq).tolist()):
+            consider(q, float(ms1[i]), ("clustered", i))
+
+        # family 2 — lockstep water-filling over the total-step level
+        targets = np.maximum(levels[:, None] - arr.offsets[None, :], 0)
+        nonzero = targets.any(axis=1)
+        h2: list = []
+        Tc2, ms2, _, _ = arrays._lockstep_rounds(
+            arr.ids, arr.tau_prime, targets, delay, history=h2)
+        for i, q in enumerate(arrays.score_rows(Tc2, oq).tolist()):
+            if nonzero[i]:
+                consider(q, float(ms2[i]), ("lockstep", i))
+
+        # family 3 — shared-NEW-horizon Algorithm 1 candidates
+        levels3 = np.arange(1, t_new_max + 1, dtype=np.int64)
+        h3: list = []
+        Tc3, ms3, _, _ = arrays._clustered_rounds(
+            arr.ids, arr.tau_prime, np.zeros(arr.K, dtype=np.int64),
+            delay, levels3, history=h3)
+        for i, q in enumerate(arrays.score_rows(Tc3, oq).tolist()):
+            consider(q, float(ms3[i]), ("shared", i))
+
+        pick = state["pick"]
+        if pick is None:
+            return BatchPlan(batches=[], start_times=[],
+                             steps_completed={k: 0 for k in ids},
+                             delay=delay)
+        family, i = pick
+        if family == "clustered":
+            counts, hist, replay = Tc1[i], h1, arrays._replay_clustered
+        elif family == "lockstep":
+            counts, hist, replay = Tc2[i], h2, arrays._replay_lockstep
+        else:
+            counts, hist, replay = Tc3[i], h3, arrays._replay_clustered
+        batches, starts = replay(arr.ids, i, hist, delay)
+        steps = {int(k): int(c) for k, c in zip(arr.ids, counts)}
+        return BatchPlan(batches=batches, start_times=starts,
+                         steps_completed=steps, delay=delay)
 
 
 stacking_offset = StackingOffset()

@@ -47,6 +47,7 @@ from typing import Callable, Dict, List, Optional, Set
 
 import numpy as np
 
+from repro.core import arrays
 from repro.core.bandwidth import make_plan
 from repro.core.delay_model import DelayModel
 from repro.core.plan import BatchPlan
@@ -489,12 +490,17 @@ def simulate_online(scn: Scenario, scheduler, allocator: AllocatorFn,
                     delay: Optional[DelayModel] = None,
                     quality: Optional[QualityModel] = None,
                     admission: Optional[AdmissionFn] = None,
-                    validate: bool = True) -> OnlineResult:
+                    validate: bool = True,
+                    engine: Optional[str] = None) -> OnlineResult:
     """Event-driven arrivals + on-arrival replanning (module docstring).
 
     scheduler / allocator are plain callables with the repro.api
     protocol signatures; ``repro.api.online.OnlineProvisioner`` is the
     registry-aware front end.  ``admission`` defaults to admit-all.
+    ``engine`` pins the planning engine (``"vec"``/``"scalar"``,
+    ``repro.core.arrays``) for every replan of this run; ``None``
+    keeps the process default.  Both engines produce bit-identical
+    event sequences (tests/test_arrays.py).
     """
     if admission is None:
         admission = lambda svc, projected, states: True   # noqa: E731
@@ -502,4 +508,5 @@ def simulate_online(scn: Scenario, scheduler, allocator: AllocatorFn,
                            delay if delay is not None else DelayModel(),
                            quality if quality is not None else PowerLawFID(),
                            admission, validate=validate)
-    return sim.run()
+    with arrays.engine_scope(engine):
+        return sim.run()

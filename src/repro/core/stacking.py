@@ -18,6 +18,7 @@ from __future__ import annotations
 import math
 from typing import Dict, List, Optional, Sequence
 
+from repro.core import arrays
 from repro.core.delay_model import DelayModel
 from repro.core.plan import BatchPlan
 from repro.core.quality_model import QualityModel
@@ -65,7 +66,13 @@ def stacking_pass(service_ids: Sequence[int], tau_prime: Dict[int, float],
             tp_min = min(Tp[k] for k in active)
             cap = math.floor(((a + b) * tp_min - b * t_star) / (a * t_star)) \
                 if t_star > 0 else len(active)
-            x_n = min(len(active), cap)
+            # an empty priority cluster forces tp_min > t_star, so cap
+            # >= 1 whenever t_star >= 1 (the only levels the outer
+            # searches sweep).  The explicit clamp states that
+            # invariant here rather than leaving a degenerate negative
+            # cap to be absorbed — identically — by the generic
+            # max(1, ...) below, where the branch's reasoning is lost
+            x_n = min(len(active), max(1, cap))
         x_n = max(1, min(x_n, len(active)))
 
         # ---- batching -----------------------------------------------------
@@ -99,8 +106,19 @@ def stacking_pass(service_ids: Sequence[int], tau_prime: Dict[int, float],
 
 def stacking(services: Sequence[ServiceRequest],
              tau_prime: Dict[int, float], delay: DelayModel,
-             quality: QualityModel, t_star_max: int = 0) -> BatchPlan:
-    """Algorithm 1: search T* in 1..T*max, keep the best mean quality."""
+             quality: QualityModel, t_star_max: int = 0,
+             engine: Optional[str] = None) -> BatchPlan:
+    """Algorithm 1: search T* in 1..T*max, keep the best mean quality.
+
+    ``engine`` selects the implementation: ``"vec"`` (the process
+    default — ``repro.core.arrays``, all T* candidates swept as one
+    batched array kernel) or ``"scalar"`` (this module's reference
+    loop).  Both return bit-identical plans; tests/test_arrays.py
+    enforces it.
+    """
+    if arrays.resolve_engine(engine) == "vec":
+        return arrays.stacking_vec(services, tau_prime, delay, quality,
+                                   t_star_max)
     ids = [s.id for s in services]
     if t_star_max <= 0:
         t_star_max = max(1, max(delay.max_steps(tau_prime[k]) for k in ids))

@@ -1,0 +1,112 @@
+"""Hypothesis properties for the array-native planning engine.
+
+The invariant is stronger than "both valid": for ARBITRARY inputs the
+vectorized kernels must return bit-identical plans to the scalar
+reference — batches, start times, step counts, makespan.  Skipped (not
+a collection error) when ``hypothesis`` is not installed.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.arrays import (equal_steps_vec, offset_pass_vec,
+                               stacking_pass_vec)
+from repro.core.delay_model import DelayModel
+from repro.core.offset import StackingOffset, offset_pass
+from repro.core.quality_model import PowerLawFID
+from repro.core.service import ServiceRequest
+from repro.core.stacking import stacking, stacking_pass
+
+DELAY = DelayModel()          # paper constants
+QUALITY = PowerLawFID()
+
+
+def _services(taus):
+    return [ServiceRequest(id=i, deadline=t, spectral_eff=7.0)
+            for i, t in enumerate(taus)]
+
+
+def _tau_prime(taus):
+    return {i: t for i, t in enumerate(taus)}
+
+
+def _assert_same(a, b):
+    assert a.batches == b.batches
+    assert a.start_times == b.start_times
+    assert a.steps_completed == b.steps_completed
+
+
+taus_strategy = st.lists(
+    st.floats(min_value=0.05, max_value=30.0, allow_nan=False,
+              allow_infinity=False),
+    min_size=1, max_size=12)
+
+
+@settings(max_examples=60, deadline=None)
+@given(taus=taus_strategy, t_star=st.integers(1, 50))
+def test_pass_vec_equals_scalar(taus, t_star):
+    tp = _tau_prime(taus)
+    ids = list(range(len(taus)))
+    _assert_same(stacking_pass(ids, tp, DELAY, t_star),
+                 stacking_pass_vec(ids, tp, DELAY, t_star))
+
+
+@settings(max_examples=40, deadline=None)
+@given(taus=taus_strategy, t_star=st.integers(1, 40),
+       data=st.data())
+def test_pass_vec_equals_scalar_with_offsets(taus, t_star, data):
+    tp = _tau_prime(taus)
+    ids = list(range(len(taus)))
+    off = {k: data.draw(st.integers(0, 10)) for k in ids}
+    _assert_same(stacking_pass(ids, tp, DELAY, t_star, offsets=off),
+                 stacking_pass_vec(ids, tp, DELAY, t_star, offsets=off))
+
+
+@settings(max_examples=30, deadline=None)
+@given(taus=taus_strategy)
+def test_full_search_vec_equals_scalar(taus):
+    svcs = _services(taus)
+    tp = _tau_prime(taus)
+    vec = stacking(svcs, tp, DELAY, QUALITY, engine="vec")
+    _assert_same(stacking(svcs, tp, DELAY, QUALITY, engine="scalar"),
+                 vec)
+    vec.validate(gen_deadlines=tp)   # and the paper's constraints hold
+
+
+@settings(max_examples=30, deadline=None)
+@given(taus=taus_strategy, data=st.data())
+def test_lockstep_vec_equals_scalar(taus, data):
+    tp = _tau_prime(taus)
+    ids = list(range(len(taus)))
+    targets = {k: data.draw(st.integers(0, 15)) for k in ids}
+    _assert_same(offset_pass(ids, tp, DELAY, targets),
+                 offset_pass_vec(ids, tp, DELAY, targets))
+
+
+@settings(max_examples=25, deadline=None)
+@given(taus=st.lists(st.floats(min_value=0.3, max_value=15.0),
+                     min_size=1, max_size=8),
+       data=st.data())
+def test_offset_scheduler_vec_equals_scalar(taus, data):
+    svcs = _services(taus)
+    tp = _tau_prime(taus)
+    offs = [data.draw(st.integers(0, 8)) for _ in taus]
+    plan_s = StackingOffset("scalar").plan(svcs, tp, DELAY, QUALITY,
+                                           offs)
+    plan_v = StackingOffset("vec").plan(svcs, tp, DELAY, QUALITY, offs)
+    _assert_same(plan_s, plan_v)
+
+
+@settings(max_examples=25, deadline=None)
+@given(taus=taus_strategy)
+def test_equal_steps_vec_equals_scalar(taus):
+    from repro.api.schedulers import equal_steps
+    from repro.core.arrays import engine_scope
+    svcs = _services(taus)
+    tp = _tau_prime(taus)
+    with engine_scope("scalar"):
+        ref = equal_steps(svcs, tp, DELAY, QUALITY)
+    _assert_same(ref, equal_steps_vec(svcs, tp, DELAY, QUALITY))

@@ -103,17 +103,30 @@ class TestCompareGate:
 
     def test_committed_baseline_gates_known_suites(self):
         """The repo baseline must only gate metrics the CI bench job
-        actually produces (api, online, multiserver, churn suites)."""
+        actually produces (api, online, multiserver, churn,
+        planner_speed suites)."""
         baseline = json.loads(
             (ROOT / "benchmarks" / "baseline.json").read_text())
         assert baseline["metrics"], "baseline must gate something"
         for name, spec in baseline["metrics"].items():
             assert name.split("_")[0] in ("online", "multiserver",
-                                          "api", "churn", "offset")
+                                          "api", "churn", "offset",
+                                          "planner")
             assert spec["kind"] in ("flag", "lower_is_better")
         # every required suite is one the CI bench job runs (ci.yml)
         assert set(baseline["required_suites"]) == \
-            {"api", "online", "multiserver", "churn"}
+            {"api", "online", "multiserver", "churn", "planner_speed"}
+
+    def test_planner_speed_flags_are_gated(self):
+        """ISSUE 5 acceptance: the bench gate must pin the >=5x
+        vec-speedup claim and the bit-identical-plans flag at 1."""
+        baseline = json.loads(
+            (ROOT / "benchmarks" / "baseline.json").read_text())
+        m = baseline["metrics"]
+        assert m["planner_vec_speedup_5x"] == \
+            {"value": 1.0, "kind": "flag"}
+        assert m["planner_vec_equivalent"] == \
+            {"value": 1.0, "kind": "flag"}
 
     def test_churn_dominance_flag_is_gated(self):
         """ISSUE 4 acceptance: the bench gate must pin the offset-vs-

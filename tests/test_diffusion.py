@@ -123,3 +123,24 @@ class TestExecutor:
         for v in imgs.values():
             assert v.shape == (16, 16, 3)
             assert np.isfinite(v).all()
+
+    def test_timed_run_matches_untimed(self, unet_params):
+        """Regression (ISSUE 5): timed mode used to re-run the step
+        after the timing pair, advancing every batch TWO DDIM steps.
+        Timing must be side-effect-free — identical images for a fixed
+        key, one timing entry per batch."""
+        delay, quality = DelayModel(), PowerLawFID()
+        scn = make_scenario(K=3, tau_min=2, tau_max=4, seed=2)
+        tp = tau_prime_of(scn, inv_se_allocate(scn))
+        plan = stacking(scn.services, tp, delay, quality)
+        assert plan.num_batches > 0
+        ex = BatchDenoisingExecutor(SMOKE, unet_params)
+        key = jax.random.PRNGKey(11)
+        imgs_timed, timings = ex.run(plan, key, timed=True)
+        imgs_plain, no_timings = ex.run(plan, key)
+        assert no_timings == []
+        assert len(timings) == plan.num_batches
+        assert all(x == len(b) for (x, _), b in zip(timings,
+                                                    plan.batches))
+        for k in imgs_plain:
+            np.testing.assert_array_equal(imgs_timed[k], imgs_plain[k])

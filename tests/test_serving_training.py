@@ -69,6 +69,49 @@ class TestServingEngine:
         vals = [q.fid(t) for t in range(0, 50)]
         assert all(a >= b for a, b in zip(vals, vals[1:]))
 
+    @pytest.mark.parametrize("sched_name", ["greedy", "fixed_size"])
+    def test_registry_scheduler_plans_and_serves(self, tiny, sched_name):
+        """ISSUE 5: the engine must work with registry schedulers other
+        than stacking — the plan validates, executes, and every request
+        gets exactly its planned token count."""
+        cfg, params = tiny
+        eng = ServingEngine(cfg, params, RUN, max_len=64,
+                            delay=DelayModel(a=0.002, b=0.02),
+                            scheduler=sched_name)
+        ids = [eng.submit(np.arange(6, dtype=np.int32), d)
+               for d in (0.15, 0.3)]
+        plan = eng.plan()
+        plan.validate()
+        assert sum(plan.steps_completed.values()) > 0
+        out = eng.execute(plan)
+        for rid in ids:
+            assert len(out[rid]) == plan.steps_completed[rid]
+
+    def test_timed_execute_populates_last_timings(self, tiny):
+        """The timed decode path: one steady-state (batch_size, s)
+        reading per batch in ``last_timings``, sizes matching the plan,
+        and the same tokens as an untimed run (timing must be
+        side-effect-free)."""
+        cfg, params = tiny
+        delay = DelayModel(a=0.002, b=0.02)
+        prompts = [np.arange(5, dtype=np.int32) + i for i in range(2)]
+
+        eng = ServingEngine(cfg, params, RUN, max_len=64, delay=delay,
+                            scheduler="greedy")
+        ids = [eng.submit(p, 0.2) for p in prompts]
+        plan = eng.plan()
+        out = eng.execute(plan, timed=True)
+        assert len(eng.last_timings) == plan.num_batches
+        assert [x for x, _ in eng.last_timings] == plan.batch_sizes()
+        assert all(s > 0 for _, s in eng.last_timings)
+
+        ref = ServingEngine(cfg, params, RUN, max_len=64, delay=delay,
+                            scheduler="greedy")
+        ref_ids = [ref.submit(p, 0.2) for p in prompts]
+        ref_out = ref.execute(ref.plan())
+        for rid, ref_rid in zip(ids, ref_ids):
+            assert out[rid] == ref_out[ref_rid]
+
 
 class TestTraining:
     def test_loss_decreases_on_memorizable_data(self, tiny):

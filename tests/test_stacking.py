@@ -72,6 +72,31 @@ class TestStackingBasics:
         first_ids = {k for k, _ in plan.batches[0]}
         assert 0 in first_ids and 1 in first_ids
 
+    def test_empty_priority_cluster_tight_deadlines(self):
+        """The no-priority-cluster packing branch (ISSUE 5): with tight
+        deadlines and a small T*, every projected count sits above the
+        water level, so F is empty and packing falls through to the
+        tp_min-based cap.  The branch must still pack at least the most
+        urgent service each round (cap clamped >= 1 — an empty F forces
+        tp_min > T*, so the cap is mathematically >= 1, and the clamp
+        keeps adversarial direct calls from a degenerate count)."""
+        from repro.core.stacking import stacking_pass
+        taus = [1.6, 1.7, 1.9, 2.1]
+        tp = _tau_prime(taus)
+        ids = list(tp)
+        # t_star=1: every Tp = Te >= 4 > 1 at round 0 -> F empty
+        plan = stacking_pass(ids, tp, DELAY, t_star=1)
+        plan.validate(gen_deadlines=tp)
+        assert plan.num_batches > 0
+        assert all(len(b) >= 1 for b in plan.batches)
+        # the most urgent service leads the first batch
+        assert plan.batches[0][0][0] == 0
+        # the degenerate-input guard: t_star <= 0 must not crash and
+        # must still produce a valid plan (cap would be meaningless)
+        for t_star in (0, -3):
+            p = stacking_pass(ids, tp, DELAY, t_star)
+            p.validate(gen_deadlines=tp)
+
     def test_near_optimal_small_instance(self):
         """Optimality gap vs. exact DP on a tiny instance (beyond-paper)."""
         taus = [2.0, 3.0, 4.0]
