@@ -15,6 +15,27 @@ Times the planning hot paths under both engines on identical inputs
     times, step counts).  Timing varies per machine; equivalence must
     not, so only the flags are gated, the ``*_ms`` rows are trend data
     for the nightly baseline refresh.
+
+When the jit-compiled jax engine (``repro.core.jaxplan``) is
+importable the suite additionally times it (docs/PERFORMANCE.md,
+"jax engine"):
+
+  * ``planner_tstar_K{1024,10000}_jax_ms`` — one jitted T* search at
+    population scale, next to the matching ``_vec_ms`` rows (trend
+    data: XLA's CPU sort loses to NumPy's at K=10^4 single-scenario,
+    and the rows document exactly that);
+  * ``planner_plan_many_S1000_*`` — 1000 stacked scenarios planned in
+    ONE jitted ``plan_many`` call vs the same 1000 planned by a vec
+    loop, with the amortized per-scenario times;
+  * ``planner_jax_equivalent`` — gated flag: jax objectives match the
+    vec reference within ``JAX_TOL`` on every timed instance
+    (tolerance, not bit identity — the documented contract);
+  * ``planner_jax_batched_ok`` — gated flag: the single jitted
+    ``plan_many`` call beats the vec per-scenario loop end to end at
+    S=1000 (the amortization claim of ISSUE 6).
+
+Warm-up calls run before any jax timing so jit compilation is paid
+outside the measured region; ``_ms`` rows are warm-cache numbers.
 """
 
 import time
@@ -24,11 +45,15 @@ import numpy as np
 from repro.core.delay_model import DelayModel
 from repro.core.offset import StackingOffset
 from repro.core.quality_model import PowerLawFID
-from repro.core.service import make_scenario
+from repro.core.service import ServiceRequest, make_scenario
 from repro.core.stacking import stacking
 
 GATE_K = 64          # the acceptance bar's "N >= 64 services" instance
 GATE_SPEEDUP = 5.0
+
+JAX_TSTAR_SIZES = (1024, 10000)   # ISSUE-6 population scales
+PLAN_MANY_S, PLAN_MANY_K = 1000, 20
+JAX_TOL = 1e-9       # documented objective tolerance (docs/PERFORMANCE.md)
 
 
 def _best_of(fn, reps: int) -> float:
@@ -99,3 +124,87 @@ def run(csv_rows, sizes=(16, 64, 128, 256), reps=3):
     csv_rows.append(("planner_vec_equivalent", float(equivalent),
                      "1=vec plans bit-identical to scalar on every "
                      "timed scenario"))
+
+    _run_jax(csv_rows, delay, quality, reps)
+
+
+def _mean_fid(plan, ids, quality):
+    return quality.mean_fid([plan.steps_completed[k] for k in ids])
+
+
+def _run_jax(csv_rows, delay, quality, reps):
+    """jax-engine rows + gated flags; a no-op note when jax is absent
+    (the gate then fails on the missing flags, loudly)."""
+    try:
+        import repro.core.jaxplan as jaxplan
+    except ImportError:
+        csv_rows.append(("planner_jax_unavailable", 1.0,
+                         "jax not importable; jax rows and gated "
+                         "flags not emitted"))
+        return
+
+    jax_equiv = True
+
+    # -- one jitted T* search at population scale -------------------------
+    for K in JAX_TSTAR_SIZES:
+        scn = make_scenario(K=K, seed=0)
+        tp = {s.id: s.deadline - 0.4 for s in scn.services}
+        svcs, ids = scn.services, [s.id for s in scn.services]
+        pj = stacking(svcs, tp, delay, quality, engine="jax")  # jit warmup
+        pv = stacking(svcs, tp, delay, quality, engine="vec")
+        jax_equiv &= abs(_mean_fid(pv, ids, quality)
+                         - _mean_fid(pj, ids, quality)) < JAX_TOL
+        r = 1 if K >= 10_000 else reps
+        t_ve = _best_of(lambda: stacking(svcs, tp, delay, quality,
+                                         engine="vec"), r)
+        t_jx = _best_of(lambda: stacking(svcs, tp, delay, quality,
+                                         engine="jax"), r)
+        csv_rows.append((f"planner_tstar_K{K}_vec_ms", t_ve * 1e3,
+                         "Alg-1 T* search, array-native"))
+        csv_rows.append((f"planner_tstar_K{K}_jax_ms", t_jx * 1e3,
+                         "Alg-1 T* search, one jitted sweep (warm)"))
+        csv_rows.append((f"planner_tstar_K{K}_jax_vs_vec",
+                         t_ve / max(t_jx, 1e-12), "vec_ms / jax_ms"))
+
+    # -- 1000 stacked scenarios in ONE jitted plan_many call --------------
+    rng = np.random.default_rng(2)
+    taus = rng.uniform(7.0, 20.0, size=(PLAN_MANY_S, PLAN_MANY_K))
+    scns = [({i: float(t) for i, t in enumerate(row)},
+             [ServiceRequest(id=i, deadline=float(t), spectral_eff=7.0)
+              for i, t in enumerate(row)])
+            for row in taus]
+    res = jaxplan.plan_many(taus, delay=delay, quality=quality)  # warmup
+    t_jx = _best_of(lambda: jaxplan.plan_many(taus, delay=delay,
+                                              quality=quality), 1)
+
+    def vec_loop():
+        for tp, svcs in scns:
+            stacking(svcs, tp, delay, quality, engine="vec")
+
+    t_ve = _best_of(vec_loop, 1)
+    for s in range(0, PLAN_MANY_S, 100):       # sampled equivalence
+        tp, svcs = scns[s]
+        pv = stacking(svcs, tp, delay, quality, engine="vec")
+        ids = [sv.id for sv in svcs]
+        jax_equiv &= abs(_mean_fid(pv, ids, quality)
+                         - float(res.mean_fid[s])) < JAX_TOL
+
+    csv_rows.append(("planner_plan_many_S1000_vec_ms", t_ve * 1e3,
+                     f"{PLAN_MANY_S} scenarios, per-scenario vec loop"))
+    csv_rows.append(("planner_plan_many_S1000_jax_ms", t_jx * 1e3,
+                     f"{PLAN_MANY_S} scenarios, ONE jitted plan_many "
+                     f"call (warm)"))
+    csv_rows.append(("planner_plan_many_S1000_per_scenario_jax_ms",
+                     t_jx * 1e3 / PLAN_MANY_S,
+                     "amortized jax plan time per scenario"))
+    csv_rows.append(("planner_plan_many_S1000_per_scenario_vec_ms",
+                     t_ve * 1e3 / PLAN_MANY_S,
+                     "vec plan time per scenario"))
+
+    csv_rows.append(("planner_jax_equivalent", float(jax_equiv),
+                     f"1=jax objectives within {JAX_TOL:g} of vec on "
+                     f"every timed instance"))
+    csv_rows.append(("planner_jax_batched_ok",
+                     float(t_jx < t_ve),
+                     "1=one jitted plan_many call beats the vec "
+                     "per-scenario loop at S=1000"))

@@ -91,6 +91,7 @@ def git_sha() -> str:
 
 def write_json(out_dir: Path, suite: str, rows, elapsed_s: float,
                sha: str, workers: int = 1) -> Path:
+    from repro.core import arrays
     out_dir.mkdir(parents=True, exist_ok=True)
     path = out_dir / f"BENCH_{suite}.json"
     payload = {
@@ -100,6 +101,9 @@ def write_json(out_dir: Path, suite: str, rows, elapsed_s: float,
         # refreshes capture planner/suite speed trends, not just FIDs
         "elapsed_s": round(elapsed_s, 3),
         "workers": workers,
+        # the active planner engine (vec/scalar/jax, process default at
+        # write time) so baseline refreshes can tell engine trends apart
+        "engine": arrays.get_engine(),
         "rows": [{"name": n, "value": v, "derived": d}
                  for n, v, d in rows],
     }

@@ -12,7 +12,13 @@ Engine note (docs/PERFORMANCE.md): ``stacking``, ``equal_steps`` and
 ``stacking_offset`` dispatch to the array-native engine
 (``repro.core.arrays``) by default; the ``*_scalar`` entries pin the
 reference per-level loops — bit-identical plans, kept as ground truth
-and for the ``planner_speed`` benchmark's baseline side.
+and for the ``planner_speed`` benchmark's baseline side.  The
+``*_jax`` entries pin the jit-compiled ``repro.core.jaxplan`` backend
+(tolerance-equivalent, not bit-identical); they register
+unconditionally and resolve the backend lazily at call time, so
+importing ``repro.api`` never imports jax and a checkout without jax
+fails with a ValueError naming the missing backend only when a
+``*_jax`` scheduler is actually invoked.
 """
 
 from __future__ import annotations
@@ -43,6 +49,9 @@ register_scheduler("stacking_offset", stacking_offset,
 # engine-pinned reference entries (scalar ground-truth paths)
 register_scheduler("stacking_offset_scalar", StackingOffset("scalar"),
                    aliases=("offset_scalar",))
+# engine-pinned jit-compiled entries (repro.core.jaxplan backend)
+register_scheduler("stacking_offset_jax", StackingOffset("jax"),
+                   aliases=("offset_jax",))
 
 
 @register_scheduler("stacking_scalar")
@@ -55,6 +64,17 @@ def stacking_scalar(services: Sequence[ServiceRequest],
     return stacking(services, tau_prime, delay, quality, engine="scalar")
 
 
+@register_scheduler("stacking_jax")
+def stacking_jax(services: Sequence[ServiceRequest],
+                 tau_prime: Dict[int, float], delay: DelayModel,
+                 quality: QualityModel) -> BatchPlan:
+    """Algorithm 1 pinned to the jit-compiled ``repro.core.jaxplan``
+    backend: the whole T* sweep runs as one XLA program.  Equivalent to
+    ``stacking`` within the documented tolerance (docs/PERFORMANCE.md);
+    raises ValueError if the jax backend is unavailable."""
+    return stacking(services, tau_prime, delay, quality, engine="jax")
+
+
 @register_scheduler("equal_steps")
 def equal_steps(services: Sequence[ServiceRequest],
                 tau_prime: Dict[int, float], delay: DelayModel,
@@ -62,9 +82,14 @@ def equal_steps(services: Sequence[ServiceRequest],
     """Balanced baseline: every service targets the *same* step count T*,
     batched together each step; T* searched like Algorithm 1's outer loop.
     Isolates the paper's insight (ii) — balanced step counts — from its
-    clustering/packing machinery.  Dispatches to the array-native
-    lockstep sweep unless the scalar engine is selected."""
-    if arrays.get_engine() == "vec":
+    clustering/packing machinery.  Dispatches to the active engine's
+    lockstep sweep (array-native or a registered backend such as
+    ``jax``) unless the scalar engine is selected."""
+    eng = arrays.get_engine()
+    impl = arrays.engine_impl(eng)
+    if impl is not None:
+        return impl.equal_steps(services, tau_prime, delay, quality)
+    if eng == "vec":
         return arrays.equal_steps_vec(services, tau_prime, delay, quality)
     ids = [s.id for s in services]
     feasible = [k for k in ids if delay.max_steps(tau_prime[k]) > 0]

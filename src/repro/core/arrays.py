@@ -53,39 +53,106 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import importlib
 import os
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.delay_model import DelayModel
 from repro.core.plan import BatchPlan
 
-VALID_ENGINES = ("vec", "scalar")
-_ENGINE = os.environ.get("REPRO_PLANNER_ENGINE", "vec")
-if _ENGINE not in VALID_ENGINES:     # a typo'd env var must fail loudly
-    raise ValueError(
-        f"REPRO_PLANNER_ENGINE={_ENGINE!r}; expected one of "
-        f"{VALID_ENGINES}")
-
 # int64 sentinel pushing inactive services past every real Tp in the
 # (Tp, tau', id) lexsort; far below int64 overflow when summed with keys
 _TP_INF = np.int64(1) << 62
 
 
+# -------------------------------------------------------------------------
+# Engine registry
+# -------------------------------------------------------------------------
+#
+# One extensible name -> implementation map shared by ``set_engine``,
+# ``resolve_engine`` and the ``REPRO_PLANNER_ENGINE`` guard.  The two
+# built-in engines ("vec", "scalar") register ``None`` — their dispatch
+# lives inline in the consumers — while optional backends register an
+# implementation object whose attributes (``stacking``, ``equal_steps``,
+# ``offset_plan``, ``optimal_plan``) the consumers call instead
+# (``repro.core.jaxplan`` registers the "jax" engine this way).
+
+_ENGINE_IMPLS: Dict[str, Optional[Any]] = {}
+_BACKENDS_PROBED = False
+_BACKEND_ERRORS: Dict[str, str] = {}
+# optional backend modules probed on first unknown-engine lookup, so
+# ``REPRO_PLANNER_ENGINE=jax`` (or ``set_engine("jax")``) works without
+# anyone importing the backend first — and without paying its import
+# cost when nobody asks for it
+_OPTIONAL_BACKENDS = {"jax": "repro.core.jaxplan"}
+
+
+def register_engine(name: str, impl: Optional[Any] = None) -> None:
+    """Register a planner engine.  ``impl`` is ``None`` for the
+    built-in engines (dispatched inline by the consumers) or a backend
+    namespace providing ``stacking`` / ``equal_steps`` /
+    ``offset_plan`` / ``optimal_plan`` entry points."""
+    if name in _ENGINE_IMPLS and _ENGINE_IMPLS[name] is not impl:
+        raise ValueError(f"planner engine {name!r} is already registered")
+    _ENGINE_IMPLS[name] = impl
+
+
+register_engine("vec")
+register_engine("scalar")
+
+
+def registered_engines() -> Tuple[str, ...]:
+    """The currently registered engine names, sorted.  Optional
+    backends appear once imported (or once first requested by name)."""
+    return tuple(sorted(_ENGINE_IMPLS))
+
+
+def _probe_backends() -> None:
+    """Import the optional backend modules once so they can register
+    their engines; a backend whose dependency is missing records the
+    reason for the error message instead of failing the probe."""
+    global _BACKENDS_PROBED
+    if _BACKENDS_PROBED:
+        return
+    _BACKENDS_PROBED = True
+    for eng, module in _OPTIONAL_BACKENDS.items():
+        try:
+            importlib.import_module(module)
+        except ImportError as e:      # dependency absent: engine stays
+            _BACKEND_ERRORS[eng] = str(e)   # unregistered, reason kept
+
+
+def _require_engine(name: str) -> str:
+    """Validate an engine name against the registry (probing optional
+    backends on a miss), raising with the dynamic engine list."""
+    if name not in _ENGINE_IMPLS:
+        _probe_backends()
+    if name not in _ENGINE_IMPLS:
+        hint = (f" (backend unavailable: {_BACKEND_ERRORS[name]})"
+                if name in _BACKEND_ERRORS else "")
+        raise ValueError(
+            f"unknown planner engine {name!r}; registered engines: "
+            f"{', '.join(registered_engines())}{hint}")
+    return name
+
+
+def engine_impl(name: str) -> Optional[Any]:
+    """The backend implementation registered for ``name`` (``None``
+    for the built-in vec/scalar engines)."""
+    return _ENGINE_IMPLS[_require_engine(name)]
+
+
 def get_engine() -> str:
-    """The process-wide planning engine ("vec" or "scalar")."""
+    """The process-wide planning engine ("vec" by default)."""
     return _ENGINE
 
 
 def set_engine(name: str) -> None:
     """Select the process-wide planning engine."""
     global _ENGINE
-    if name not in VALID_ENGINES:
-        raise ValueError(
-            f"unknown planner engine {name!r}; expected one of "
-            f"{VALID_ENGINES}")
-    _ENGINE = name
+    _ENGINE = _require_engine(name)
 
 
 @contextlib.contextmanager
@@ -108,11 +175,7 @@ def resolve_engine(engine: Optional[str]) -> str:
     """An explicit ``engine=`` argument, or the process default."""
     if engine is None:
         return get_engine()
-    if engine not in VALID_ENGINES:
-        raise ValueError(
-            f"unknown planner engine {engine!r}; expected one of "
-            f"{VALID_ENGINES}")
-    return engine
+    return _require_engine(engine)
 
 
 # -------------------------------------------------------------------------
@@ -520,3 +583,10 @@ def equal_steps_vec(services, tau_prime: Dict[int, float],
     steps = {int(k): int(c) for k, c in zip(arr.ids, Tc[best_i])}
     return BatchPlan(batches=batches, start_times=starts,
                      steps_completed=steps, delay=delay)
+
+
+# The process default, validated last so an optional backend named by
+# the env var can be probed (and can import this partially-initialized
+# module) with every definition above already bound.  A typo'd env var
+# still fails loudly, at import time, listing the registered engines.
+_ENGINE = _require_engine(os.environ.get("REPRO_PLANNER_ENGINE", "vec"))

@@ -1,0 +1,162 @@
+"""The "jax" planner engine: jitted outer searches behind the same
+entry points the vec/scalar engines dispatch through.
+
+Each search runs its candidate sweep as one jit-compiled kernel
+(``repro.core.jaxplan.kernels``), scores the resulting ``(L, K)``
+count matrix — vectorized in jax when the quality model is the
+paper's ``PowerLawFID``, through the exact scalar calls otherwise —
+applies the scalar searches' first-strictly-better selection rule,
+and materializes only the winning candidate via the exact NumPy
+single-level pass from ``repro.core.arrays``.  Returned plans are
+therefore always valid ``BatchPlan``s built by the same code the
+other engines use; what may differ from the vec/scalar engines —
+within the documented tolerance (docs/PERFORMANCE.md) — is *which*
+candidate wins when two levels score within ~1e-12 of each other.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import numpy as np
+
+from repro.core import arrays
+from repro.core.delay_model import DelayModel
+from repro.core.jaxplan import kernels
+from repro.core.plan import BatchPlan
+from repro.core.quality_model import PowerLawFID
+
+
+def _score(Tc: np.ndarray, quality) -> np.ndarray:
+    """Row scores for a count matrix: the jitted power-law fast path
+    for a bare ``PowerLawFID``, else ``arrays.score_rows`` (exact,
+    deduplicated).  Wrapped objectives — notably the online
+    replanner's ``_OffsetQuality``, whose ``mean_fid`` shifts counts
+    by per-service progress and applies the doomed rule — must NOT be
+    unwrapped here: ``offset_plan`` below reconstructs that objective
+    explicitly; every other wrapper goes through its own ``mean_fid``.
+    """
+    if type(quality) is PowerLawFID:
+        return kernels.powerlaw_scores(Tc, quality, None)
+    return arrays.score_rows(Tc, quality)
+
+
+def _first_best(qs: np.ndarray) -> int:
+    """First candidate strictly better (by 1e-12) than everything
+    before it — the scalar searches' selection rule, on host."""
+    best_i, best_q = -1, float("inf")
+    for i, q in enumerate(qs.tolist()):
+        if q < best_q - 1e-12:
+            best_i, best_q = i, q
+    return best_i
+
+
+def stacking(services, tau_prime: Dict[int, float], delay: DelayModel,
+             quality, t_star_max: int = 0) -> BatchPlan:
+    """Algorithm 1 with the outer T* search as one jitted sweep; the
+    winning level is materialized by the exact NumPy pass."""
+    ids = [s.id for s in services]
+    if t_star_max <= 0:
+        t_star_max = max(1, max(delay.max_steps(tau_prime[k])
+                                for k in ids))
+    arr = arrays.ServiceArrays.build(ids, tau_prime)
+    levels = np.arange(1, t_star_max + 1, dtype=np.int64)
+    Tc, _ = kernels.clustered_counts(arr.tau_prime, arr.offsets, levels,
+                                     delay, ids=arr.ids)
+    best = _first_best(_score(Tc, quality))
+    assert best >= 0
+    return arrays.stacking_pass_vec(ids, tau_prime, delay,
+                                    int(levels[best]))
+
+
+def equal_steps(services, tau_prime: Dict[int, float], delay: DelayModel,
+                quality) -> BatchPlan:
+    """The balanced baseline with its shared-target search as one
+    jitted lockstep sweep (row l targets T* = l + 1 for everyone)."""
+    ids = [s.id for s in services]
+    feasible = [k for k in ids if delay.max_steps(tau_prime[k]) > 0]
+    t_max = max([delay.max_steps(tau_prime[k]) for k in feasible],
+                default=1)
+    arr = arrays.ServiceArrays.build(ids, tau_prime)
+    levels = np.arange(1, max(1, t_max) + 1, dtype=np.int64)
+    targets = np.broadcast_to(levels[:, None],
+                              (levels.size, arr.K)).copy()
+    Tc, _ = kernels.lockstep_counts(arr.tau_prime, targets, delay)
+    best = _first_best(_score(Tc, quality))
+    assert best >= 0
+    level = int(levels[best])
+    return arrays.offset_pass_vec(ids, tau_prime, delay,
+                                  {k: level for k in ids})
+
+
+def offset_plan(ids: Sequence[int], tau_prime: Dict[int, float],
+                delay: DelayModel, oq, off: Dict[int, int],
+                level_max: int, t_new_max: int) -> BatchPlan:
+    """``StackingOffset``'s three candidate families, each swept as
+    one jitted kernel and scored under the progress-aware objective
+    (``_OffsetQuality`` semantics: ``fid(done + new)`` with the doomed
+    rule), with the scalar tie rule — objective first, shorter
+    makespan among objective-equal candidates."""
+    arr = arrays.ServiceArrays.build(ids, tau_prime, off)
+    off_vec = arr.offsets
+    doomed = np.zeros(arr.K, dtype=bool)
+    for i in getattr(oq, "doomed", ()):
+        doomed[i] = True
+    # the _OffsetQuality objective, reconstructed for the jitted
+    # scorer: fid(offset + new) with doomed -> fid(0), offsets and
+    # doomed exactly as ``oq`` carries them (positionally aligned with
+    # ``ids``).  Non-power-law bases take the exact score_rows path.
+    base = getattr(oq, "base", None)
+    if type(base) is not PowerLawFID:
+        base = None
+
+    def score(Tc, offsets):
+        if base is not None:
+            return kernels.powerlaw_scores(Tc, base, offsets, doomed)
+        return arrays.score_rows(Tc, oq)
+
+    state = {"q": oq.mean_fid([0] * len(ids)), "ms": 0.0,
+             "pick": None}        # None = the all-retire empty plan
+
+    def consider(q: float, ms: float, pick) -> None:
+        if q < state["q"] - 1e-12 or \
+                (q < state["q"] + 1e-12 and ms < state["ms"] - 1e-12):
+            state.update(q=q, ms=ms, pick=pick)
+
+    levels = np.arange(1, level_max + 1, dtype=np.int64)
+    # family 1 — Algorithm 1 clustered on TOTAL counts
+    Tc1, ms1 = kernels.clustered_counts(arr.tau_prime, off_vec, levels,
+                                        delay, ids=arr.ids)
+    for i, q in enumerate(score(Tc1, off_vec).tolist()):
+        consider(q, float(ms1[i]), ("clustered", i))
+
+    # family 2 — lockstep water-filling over the total-step level
+    targets = np.maximum(levels[:, None] - off_vec[None, :], 0)
+    nonzero = targets.any(axis=1)
+    Tc2, ms2 = kernels.lockstep_counts(arr.tau_prime, targets, delay)
+    for i, q in enumerate(score(Tc2, off_vec).tolist()):
+        if nonzero[i]:
+            consider(q, float(ms2[i]), ("lockstep", i))
+
+    # family 3 — shared-NEW-horizon Algorithm 1 candidates
+    levels3 = np.arange(1, t_new_max + 1, dtype=np.int64)
+    Tc3, ms3 = kernels.clustered_counts(
+        arr.tau_prime, np.zeros(arr.K, dtype=np.int64), levels3, delay,
+        ids=arr.ids)
+    for i, q in enumerate(score(Tc3, off_vec).tolist()):
+        consider(q, float(ms3[i]), ("shared", i))
+
+    pick = state["pick"]
+    if pick is None:
+        return BatchPlan(batches=[], start_times=[],
+                         steps_completed={k: 0 for k in ids},
+                         delay=delay)
+    family, i = pick
+    if family == "clustered":
+        return arrays.stacking_pass_vec(ids, tau_prime, delay,
+                                        int(levels[i]), offsets=off)
+    if family == "lockstep":
+        tgt = {k: max(0, int(levels[i]) - off.get(k, 0)) for k in ids}
+        return arrays.offset_pass_vec(ids, tau_prime, delay, tgt)
+    return arrays.stacking_pass_vec(ids, tau_prime, delay,
+                                    int(levels3[i]))

@@ -1,0 +1,107 @@
+"""``plan_many`` — the whole Algorithm-1 T* search, vmapped over a
+stack of scenarios and compiled to one XLA program.
+
+Scenario sweeps and MPC-style lookahead need thousands of *small*
+plans, and at that scale Python dispatch — not arithmetic — is what
+the vec engine pays for per scenario.  Stacking the scenarios into a
+``(S, K)`` tau' matrix (padded to a common K, with a validity mask)
+amortizes everything: one jitted call runs the clustered sweep, the
+power-law scoring and the first-best selection for all S scenarios at
+once and returns per-scenario winning levels, completed counts,
+objectives and makespans.
+
+Scenario rows are independent — a padded service (``valid=False`` or
+tau'=0) never joins a batch and never contributes to the objective.
+Tau' ties inside a scenario are broken by position (the batched
+equivalent of the service-id tie-break, exact when ids are
+0..K-1 in position order, which is how scenario samplers build
+instances).  Materializing the ragged batch lists for a chosen
+scenario stays a per-scenario call: ``arrays.stacking_pass_vec(ids,
+tau_prime, delay, int(res.best_level[i]))``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.delay_model import DelayModel
+from repro.core.jaxplan import kernels
+from repro.core.quality_model import PowerLawFID
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanManyResult:
+    """Per-scenario outputs of one batched T* search."""
+    best_level: np.ndarray   # (S,) int64 — winning T* per scenario
+    steps: np.ndarray        # (S, K) int64 — completed counts T_k
+    mean_fid: np.ndarray     # (S,) float64 — objective at the winner
+    makespan: np.ndarray     # (S,) float64 — busy time at the winner
+
+    @property
+    def num_scenarios(self) -> int:
+        return self.best_level.shape[0]
+
+
+def plan_many(tau_prime: np.ndarray, *, delay: DelayModel,
+              quality: PowerLawFID,
+              offsets: Optional[np.ndarray] = None,
+              valid: Optional[np.ndarray] = None,
+              t_star_max: int = 0) -> PlanManyResult:
+    """Plan S stacked scenarios in a single jitted call.
+
+    ``tau_prime`` is ``(S, K)`` denoising budgets, K padded to the
+    widest scenario; ``valid`` (same shape, default all-true) masks the
+    padding; ``offsets`` (int, same shape) carries already-completed
+    steps for replanning sweeps.  ``quality`` must be a ``PowerLawFID``
+    (the paper's objective) — scoring runs inside the fused kernel.
+    ``t_star_max=0`` sizes the candidate grid from the loosest budget.
+    """
+    tau_prime = np.atleast_2d(np.asarray(tau_prime, dtype=np.float64))
+    S, K = tau_prime.shape
+    if not isinstance(quality, PowerLawFID):
+        raise TypeError("plan_many scores inside the jitted kernel and "
+                        "supports PowerLawFID objectives only; use the "
+                        "per-scenario stacking() entry point for custom "
+                        "quality models")
+    off = np.zeros((S, K), dtype=np.int64) if offsets is None \
+        else np.broadcast_to(np.asarray(offsets, dtype=np.int64),
+                             (S, K)).copy()
+    vd = np.ones((S, K), dtype=bool) if valid is None \
+        else np.broadcast_to(np.asarray(valid, dtype=bool), (S, K)).copy()
+    taup0 = np.where(vd, tau_prime, 0.0)    # padded services are inert
+
+    if t_star_max <= 0:
+        loosest = float(taup0.max(initial=0.0))
+        t_star_max = max(1, delay.max_steps(loosest))
+    levels = np.arange(1, t_star_max + 1, dtype=np.int64)
+    L = levels.size
+
+    # bucket-pad every axis so sweeps of varying width reuse jits
+    Sp, Kp, Lp = kernels._bucket(S), kernels._bucket(K), kernels._bucket(L)
+    taup_p = np.zeros((Sp, Kp), dtype=np.float64)
+    taup_p[:S, :K] = taup0
+    off_p = np.zeros((Sp, Kp), dtype=np.int64)
+    off_p[:S, :K] = off
+    vd_p = np.zeros((Sp, Kp), dtype=bool)
+    vd_p[:S, :K] = vd
+    lv_p = kernels._pad_tail(levels, Lp, int(levels[-1]))
+    shift = np.int64(max(Kp, 1).bit_length())
+    tie = kernels._tie_ranks(taup_p)
+    f_thr = kernels._f_threshold(taup_p, off_p, lv_p, int(shift),
+                                 delay.a + delay.b)
+
+    with kernels.enable_x64():
+        best_i, counts, best_q, ms = kernels._plan_many_core(
+            taup_p, off_p, vd_p, tie, f_thr, lv_p, shift,
+            delay.a, delay.b, quality.alpha, quality.beta,
+            quality.gamma, quality.fid_at_zero)
+    best_i = np.asarray(best_i)[:S]
+    return PlanManyResult(
+        best_level=lv_p[np.maximum(best_i, 0)].astype(np.int64),
+        steps=np.asarray(counts)[:S, :K],
+        mean_fid=np.asarray(best_q)[:S],
+        makespan=np.asarray(ms)[:S],
+    )

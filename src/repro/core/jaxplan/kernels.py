@@ -1,0 +1,379 @@
+"""jnp ports of the (L, K) planning sweeps: ``lax.while_loop`` over
+fixed-shape per-round state, every T*/water-level candidate advancing
+together — the jit-compiled counterpart of ``repro.core.arrays``'
+``_clustered_rounds`` / ``_lockstep_rounds``.
+
+The kernels mirror the NumPy sweeps operation for operation (same
+float64 arithmetic, same ``1e-12`` epsilons, same composite integer
+sort keys), but jit/XLA may reassociate reductions and ``pow`` may
+differ from libm in the last ulp, so the contract is *tolerance*
+equivalence of objectives — never bit identity (that stays the NumPy
+vec engine's contract against the scalar reference).  See
+docs/PERFORMANCE.md ("jax engine").
+
+Only completed *counts* and makespans come out of the jitted loops:
+batch lists are inherently ragged, so the winning candidate is
+materialized afterwards by the exact NumPy single-level pass
+(``arrays.stacking_pass_vec`` / ``arrays.offset_pass_vec``) — the jax
+engine spends its time where the work is, scoring L x K x rounds, and
+returns plans constructed by the same code every other engine uses.
+
+All public helpers here take/return NumPy arrays and run the jitted
+core under ``jax.experimental.enable_x64`` so the planner's float64
+semantics never leak x64 config into the rest of the process (the
+Pallas denoiser kernels stay float32).  Shapes are padded to
+power-of-two buckets (``_bucket``) so online replans — whose residual
+K and level count shrink every event — reuse a handful of compiled
+variants instead of recompiling per instant.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import enable_x64
+
+from repro.core.delay_model import DelayModel
+
+# same sentinel as repro.core.arrays._TP_INF (not imported: this module
+# must stay importable while arrays is mid-initialization during an
+# env-var backend probe)
+_TP_INF = np.int64(1) << 62
+
+
+def _bucket(n: int) -> int:
+    """Round up to a power of two (min 8): the padded-shape buckets
+    that bound jit recompilation across shrinking replan instances."""
+    return max(8, 1 << max(0, int(n - 1).bit_length()))
+
+
+# -------------------------------------------------------------------------
+# The clustered (Algorithm-1) sweep
+# -------------------------------------------------------------------------
+
+def _clustered_core(taup0, off, levels, tie, f_thr, shift, a, b):
+    """One scenario's Algorithm-1 rounds over all L candidate levels:
+    ``(taup0 (K,), off (K,), levels (L,), tie (K,), f_thr (L,))`` ->
+    ``(Tc (L, K) int64, makespan (L,) float64)``.  Literal port of
+    ``arrays._clustered_rounds`` minus history recording."""
+    L, K = levels.shape[0], taup0.shape[0]
+    g1 = a * 1 + b                       # delay.min_task_delay()
+    step_cost = a + b
+    M = jnp.left_shift(jnp.int64(1), shift)
+
+    lv_pos = levels > 0
+    lv_f = levels.astype(jnp.float64)
+    b_lv = b * lv_f
+    a_lv = a * jnp.maximum(lv_f, 1.0)
+
+    taup = jnp.tile(taup0, (L, 1))
+    Tc = jnp.zeros((L, K), dtype=jnp.int64)
+    active = jnp.tile(taup0 >= g1, (L, 1))
+    t = jnp.zeros((L,), dtype=jnp.float64)
+
+    def cond(state):
+        _, _, active, _ = state
+        return active.any()
+
+    def body(state):
+        taup, Tc, active, t = state
+        # ---- clustering (Eqs. 15-18, offset-shifted) -----------------
+        Te = (taup / step_cost).astype(jnp.int64)
+        Tp = off[None, :] + Tc + Te
+        key = jnp.where(active, Tp * M + tie[None, :], _TP_INF)
+
+        n_active = active.sum(axis=-1, dtype=jnp.int64)
+        F = key <= f_thr[:, None]
+        n_F = F.sum(axis=-1, dtype=jnp.int64)
+
+        # ---- packing (Eqs. 19-20) ------------------------------------
+        te_max = jnp.max(jnp.where(F, Te, -1), axis=-1)
+        tau_min = jnp.min(jnp.where(F, taup, jnp.inf), axis=-1)
+        cap_f = jnp.floor((tau_min - b * te_max)
+                          / (a * jnp.maximum(te_max, 1)))
+        tp_min = jnp.right_shift(key.min(axis=-1), shift)
+        cap_nf = jnp.floor((step_cost * tp_min - b_lv) / a_lv)
+        x_f = jnp.where(te_max > 0,
+                        jnp.maximum(n_F, jnp.minimum(n_active, cap_f)),
+                        n_F)
+        x_nf = jnp.minimum(n_active,
+                           jnp.where(lv_pos, jnp.maximum(1, cap_nf),
+                                     n_active))
+        x_n = jnp.where(n_F > 0, x_f, x_nf)
+        x_n = jnp.maximum(1, jnp.minimum(x_n, n_active))
+        x_n = jnp.where(n_active > 0, x_n, 0).astype(jnp.int64)
+
+        # ---- batching -------------------------------------------------
+        sorted_key = jnp.sort(key, axis=-1)
+        thr = jnp.take_along_axis(sorted_key,
+                                  jnp.maximum(x_n - 1, 0)[:, None],
+                                  axis=-1)[:, 0]
+        thr = jnp.where(x_n > 0, thr, jnp.int64(-1))
+        packed0 = key <= thr[:, None]
+
+        def drop_cond(s):
+            packed, _, n_packed = s
+            g = a * n_packed + b
+            return (packed & (taup + 1e-12 < g[:, None])).any()
+
+        def drop_body(s):
+            packed, act, n_packed = s
+            g = a * n_packed + b
+            drop = packed & (taup + 1e-12 < g[:, None])
+            packed = packed & ~drop         # cannot afford this batch ->
+            act = act & ~drop               # service is finished
+            n_packed = packed.sum(axis=-1, dtype=jnp.int64)
+            return packed, act, n_packed
+
+        packed, active, n_packed = lax.while_loop(
+            drop_cond, drop_body, (packed0, active, x_n))
+
+        has_batch = n_packed > 0
+        g = a * n_packed + b
+        t = t + jnp.where(has_batch, g, 0.0)
+        adv = active & has_batch[:, None]   # wall clock advances for all
+        taup = taup - jnp.where(adv, g[:, None], 0.0)      # (Eq. 15)
+        Tc = Tc + packed.astype(jnp.int64)
+        # services that can no longer fit even a dedicated batch are done
+        active = active & (taup + 1e-12 >= g1)
+        return taup, Tc, active, t
+
+    _, Tc, _, t = lax.while_loop(cond, body, (taup, Tc, active, t))
+    return Tc, t
+
+
+# -------------------------------------------------------------------------
+# The lockstep sweep (equal_steps / offset_pass targets)
+# -------------------------------------------------------------------------
+
+def _lockstep_core(taup0, targets, a, b):
+    """One scenario's lockstep rounds over all L target rows:
+    ``(taup0 (K,), targets (L, K) int64)`` -> ``(Tc, makespan)``.
+    Literal port of ``arrays._lockstep_rounds``."""
+    L, K = targets.shape
+    g1 = a * 1 + b
+
+    taup = jnp.tile(taup0, (L, 1))
+    Tc = jnp.zeros((L, K), dtype=jnp.int64)
+    active = (targets > 0) & (taup0 >= g1)[None, :]
+    t = jnp.zeros((L,), dtype=jnp.float64)
+
+    def cond(state):
+        _, _, active, _ = state
+        return active.any()
+
+    def body(state):
+        taup, Tc, active, t = state
+
+        def drop_cond(s):
+            act, n = s
+            g = a * n + b
+            return (act & (taup + 1e-12 < g[:, None])).any()
+
+        def drop_body(s):
+            act, n = s
+            g = a * n + b
+            drop = act & (taup + 1e-12 < g[:, None])
+            act = act & ~drop
+            return act, act.sum(axis=-1, dtype=jnp.int64)
+
+        n0 = active.sum(axis=-1, dtype=jnp.int64)
+        active, n = lax.while_loop(drop_cond, drop_body, (active, n0))
+
+        has_batch = n > 0
+        g = a * n + b
+        t = t + jnp.where(has_batch, g, 0.0)
+        taup = taup - jnp.where(active, g[:, None], 0.0)
+        Tc = Tc + active.astype(jnp.int64)
+        active = active & (Tc < targets) & (taup + 1e-12 >= g1)
+        return taup, Tc, active, t
+
+    _, Tc, _, t = lax.while_loop(cond, body, (taup, Tc, active, t))
+    return Tc, t
+
+
+# -------------------------------------------------------------------------
+# Scoring + selection (inside jit, PowerLawFID only)
+# -------------------------------------------------------------------------
+
+def _powerlaw_rows(Tc, offsets, valid, doomed, alpha, beta, gamma, fid0):
+    """Masked progress-aware mean FID of every row of a ``(L, K)``
+    count matrix: ``fid(offset + count)`` with the ``doomed -> fid(0)``
+    rule, averaged over ``valid`` services only (pad rows excluded)."""
+    tot = Tc + offsets[None, :]
+    f = jnp.where(tot > 0,
+                  alpha * tot.astype(jnp.float64) ** (-beta) + gamma,
+                  fid0)
+    f = jnp.where(doomed[None, :], fid0, f)
+    f = jnp.where(valid[None, :], f, 0.0)
+    return f.sum(axis=-1) / jnp.maximum(valid.sum(axis=-1), 1)
+
+
+def _first_best(qs, valid_rows):
+    """The scalar outer searches' selection rule — the FIRST candidate
+    strictly better (by 1e-12) than everything before it — as a scan.
+    ``valid_rows`` masks padded/disallowed candidates out entirely."""
+    L = qs.shape[0]
+
+    def step(carry, xi):
+        best_i, best_q = carry
+        i, q, ok = xi
+        take = ok & (q < best_q - 1e-12)
+        return (jnp.where(take, i, best_i),
+                jnp.where(take, q, best_q)), None
+
+    (bi, bq), _ = lax.scan(
+        step, (jnp.int64(-1), jnp.float64(jnp.inf)),
+        (jnp.arange(L, dtype=jnp.int64), qs, valid_rows))
+    return bi, bq
+
+
+# -------------------------------------------------------------------------
+# Host-side preparation + jitted wrappers
+# -------------------------------------------------------------------------
+
+def _tie_ranks(taup0: np.ndarray,
+               ids: Optional[np.ndarray] = None) -> np.ndarray:
+    """The round-invariant (tau', id) tie-break of ``arrays``, as an
+    integer rank per service.  ``ids`` breaks tau' ties for the
+    single-scenario wrappers; batched callers (row position == id)
+    rely on the stable argsort instead."""
+    if ids is not None:
+        order = np.lexsort((ids, taup0))
+        tie = np.empty(taup0.size, dtype=np.int64)
+        tie[order] = np.arange(taup0.size, dtype=np.int64)
+        return tie
+    order = np.argsort(taup0, axis=-1, kind="stable")
+    tie = np.empty_like(order, dtype=np.int64)
+    np.put_along_axis(tie, order,
+                      np.broadcast_to(
+                          np.arange(taup0.shape[-1], dtype=np.int64),
+                          order.shape).copy(), axis=-1)
+    return tie
+
+
+def _f_threshold(taup0: np.ndarray, off: np.ndarray, levels: np.ndarray,
+                 shift: int, step_cost: float) -> np.ndarray:
+    """The priority-cluster membership threshold in composite-key
+    space (``key <= lv*M + (M-1)  <=>  Tp <= lv``), clamped to the Tp
+    bound so the int64 keys stay far from overflow.  Batched over a
+    leading scenario axis when present."""
+    M = np.int64(1) << shift
+    te0_max = np.floor(np.max(np.maximum(taup0, 0.0), axis=-1)
+                       / step_cost).astype(np.int64)
+    tp_bound = (off.max(axis=-1) if off.size else np.int64(0)) \
+        + 2 * te0_max + 4
+    assert int(np.max(tp_bound, initial=0) + 2) * int(M) < int(_TP_INF), \
+        "key space overflow"
+    lv = levels[..., :] if taup0.ndim == 1 else levels[None, :]
+    bound = tp_bound if taup0.ndim == 1 else tp_bound[:, None]
+    return np.where(lv >= 0, np.minimum(lv, bound) * M + (M - 1),
+                    np.int64(-1))
+
+
+def _pad_tail(arr: np.ndarray, n: int, value) -> np.ndarray:
+    """Pad the last axis out to ``n`` with ``value``."""
+    if arr.shape[-1] == n:
+        return arr
+    pad = [(0, 0)] * (arr.ndim - 1) + [(0, n - arr.shape[-1])]
+    return np.pad(arr, pad, constant_values=value)
+
+
+_clustered_jit = jax.jit(_clustered_core)
+_lockstep_jit = jax.jit(_lockstep_core)
+
+
+def clustered_counts(taup0: np.ndarray, off: np.ndarray,
+                     levels: np.ndarray, delay: DelayModel,
+                     ids: Optional[np.ndarray] = None
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Jit-compiled Algorithm-1 sweep for one scenario: completed
+    counts ``(L, K)`` + makespan ``(L,)`` for every candidate level at
+    once.  Inputs/outputs are NumPy; shapes are bucket-padded (extra
+    services inactive at tau'=0, extra levels duplicating the last
+    real level) and the padding stripped from the result."""
+    taup0 = np.asarray(taup0, dtype=np.float64)
+    off = np.asarray(off, dtype=np.int64)
+    levels = np.asarray(levels, dtype=np.int64)
+    K, L = taup0.size, levels.size
+    Kp, Lp = _bucket(K), _bucket(L)
+    taup_p = _pad_tail(taup0, Kp, 0.0)
+    off_p = _pad_tail(off, Kp, 0)
+    lv_p = _pad_tail(levels, Lp, int(levels[-1]) if L else 1)
+    shift = np.int64(max(Kp, 1).bit_length())
+    ids_p = None if ids is None else \
+        _pad_tail(np.asarray(ids, dtype=np.int64), Kp,
+                  int(np.max(ids, initial=0)) + 1)
+    tie = _tie_ranks(taup_p, ids_p)
+    f_thr = _f_threshold(taup_p, off_p, lv_p, int(shift), delay.a + delay.b)
+    with enable_x64():
+        Tc, t = _clustered_jit(taup_p, off_p, lv_p, tie, f_thr, shift,
+                               delay.a, delay.b)
+    return np.asarray(Tc)[:L, :K], np.asarray(t)[:L]
+
+
+def lockstep_counts(taup0: np.ndarray, targets: np.ndarray,
+                    delay: DelayModel) -> Tuple[np.ndarray, np.ndarray]:
+    """Jit-compiled lockstep sweep for one scenario: counts + makespan
+    for every ``(L, K)`` additional-step target row at once (padded
+    services carry target 0, so they never join a batch)."""
+    taup0 = np.asarray(taup0, dtype=np.float64)
+    targets = np.asarray(targets, dtype=np.int64)
+    L, K = targets.shape
+    Kp, Lp = _bucket(K), _bucket(L)
+    taup_p = _pad_tail(taup0, Kp, 0.0)
+    tg_p = _pad_tail(targets, Kp, 0)
+    tg_p = np.pad(tg_p, [(0, Lp - L), (0, 0)], constant_values=0)
+    with enable_x64():
+        Tc, t = _lockstep_jit(taup_p, tg_p, delay.a, delay.b)
+    return np.asarray(Tc)[:L, :K], np.asarray(t)[:L]
+
+
+def powerlaw_scores(Tc: np.ndarray, quality, offsets: Optional[np.ndarray],
+                    doomed: Optional[np.ndarray] = None,
+                    valid: Optional[np.ndarray] = None) -> np.ndarray:
+    """Vectorized row scores for a PowerLawFID-based objective (the
+    fast path of the jax engine's outer searches); callers fall back to
+    ``arrays.score_rows`` for arbitrary quality models."""
+    Tc = np.asarray(Tc)
+    K = Tc.shape[-1]
+    off = np.zeros(K, np.int64) if offsets is None \
+        else np.asarray(offsets, np.int64)
+    dm = np.zeros(K, bool) if doomed is None else np.asarray(doomed, bool)
+    vd = np.ones(K, bool) if valid is None else np.asarray(valid, bool)
+    with enable_x64():
+        qs = _powerlaw_jit(Tc, off, vd, dm, quality.alpha, quality.beta,
+                           quality.gamma, quality.fid_at_zero)
+    return np.asarray(qs)
+
+
+_powerlaw_jit = jax.jit(_powerlaw_rows)
+
+
+# One fused jitted T* search over S stacked scenarios: vmapped
+# clustered sweep -> masked power-law scoring -> first-best scan, all
+# in a single call (the ``plan_many`` core).
+@partial(jax.jit, static_argnums=())
+def _plan_many_core(taup0, off, valid, tie, f_thr, levels, shift,
+                    a, b, alpha, beta, gamma, fid0):
+    Tc, t = jax.vmap(
+        _clustered_core,
+        in_axes=(0, 0, None, 0, 0, None, None, None))(
+            taup0, off, levels, tie, f_thr, shift, a, b)
+    qs = jax.vmap(_powerlaw_rows,
+                  in_axes=(0, 0, 0, None, None, None, None, None))(
+        Tc, off, valid, jnp.zeros(taup0.shape[-1], bool),
+        alpha, beta, gamma, fid0)
+    L = levels.shape[0]
+    best_i, best_q = jax.vmap(_first_best, in_axes=(0, None))(
+        qs, jnp.ones((L,), bool))
+    idx = jnp.maximum(best_i, 0)
+    counts = jnp.take_along_axis(Tc, idx[:, None, None], axis=1)[:, 0, :]
+    ms = jnp.take_along_axis(t, idx[:, None], axis=1)[:, 0]
+    return best_i, counts, best_q, ms

@@ -143,8 +143,9 @@ class StackingOffset:
     supports_offsets = True        # the OffsetScheduler dispatch marker
 
     def __init__(self, engine: Optional[str] = None):
-        # None = the process-wide engine (repro.core.arrays); "scalar"
-        # pins this instance to the reference per-level passes
+        # None = the process-wide engine; "scalar" pins this instance
+        # to the reference per-level passes, any other registered
+        # engine name (e.g. "jax") pins its backend
         self.engine = engine
 
     def __call__(self, services: Sequence[ServiceRequest],
@@ -178,6 +179,10 @@ class StackingOffset:
                     for k in ids}
         level_max = max(off[k] + headroom[k] for k in ids)
         t_new_max = max(1, max(headroom.values()))
+        impl = arrays.engine_impl(engine)
+        if impl is not None:
+            return impl.offset_plan(ids, tau_prime, delay, oq, off,
+                                    level_max, t_new_max)
         if engine == "vec":
             return self._plan_vec(ids, tau_prime, delay, oq, off,
                                   level_max, t_new_max)

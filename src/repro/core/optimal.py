@@ -20,8 +20,9 @@ exponential worst case, only used with small K in tests/benchmarks.
 from __future__ import annotations
 
 import functools
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
+from repro.core import arrays
 from repro.core.delay_model import DelayModel
 from repro.core.plan import BatchPlan
 from repro.core.quality_model import QualityModel
@@ -68,12 +69,21 @@ def _make_dp(delay: DelayModel, quality: QualityModel):
 
 def optimal_mean_fid(tau_prime: Sequence[float], delay: DelayModel,
                      quality: QualityModel, max_steps: int = 60,
-                     grid: float = 1e-3) -> float:
+                     grid: float = 1e-3,
+                     engine: Optional[str] = None) -> float:
     """Exact minimum mean FID over all batch schedules (small K only).
 
     ``max_steps``/``grid`` are retained for call-site compatibility but
     unused: the affine delay model makes the DP exact without either.
+    ``engine`` follows the planner-engine convention: ``None``/``vec``/
+    ``scalar`` run this module's memoized DP; a registered backend
+    (e.g. ``"jax"``) runs its own exact search, equal within float
+    tolerance.
     """
+    impl = arrays.engine_impl(arrays.resolve_engine(engine))
+    if impl is not None:
+        return impl.optimal_mean_fid(tau_prime, delay, quality,
+                                     max_steps, grid)
     K = len(tau_prime)
     best = _make_dp(delay, quality)
     v, _ = best(0, tuple(sorted((float(t), 0) for t in tau_prime)))
@@ -82,12 +92,19 @@ def optimal_mean_fid(tau_prime: Sequence[float], delay: DelayModel,
 
 def optimal_plan(services, tau_prime: Dict[int, float], delay: DelayModel,
                  quality: QualityModel, *,
-                 max_services: int = 8) -> BatchPlan:
+                 max_services: int = 8,
+                 engine: Optional[str] = None) -> BatchPlan:
     """Exact-search *scheduler*: reconstructs an executable ``BatchPlan``
     from the DP's decisions.  Its mean FID equals ``optimal_mean_fid``
     and the plan passes ``BatchPlan.validate(gen_deadlines=tau_prime)``.
-    Exponential worst case — refuses K > ``max_services``.
+    Exponential worst case — refuses K > ``max_services``.  ``engine``
+    as in ``optimal_mean_fid`` (registered backends run their own exact
+    search; among exactly tied optima the plans may differ).
     """
+    impl = arrays.engine_impl(arrays.resolve_engine(engine))
+    if impl is not None:
+        return impl.optimal_plan(services, tau_prime, delay, quality,
+                                 max_services=max_services)
     ids = [s.id for s in services]
     K = len(ids)
     assert K <= max_services, \

@@ -112,11 +112,19 @@ def stacking(services: Sequence[ServiceRequest],
 
     ``engine`` selects the implementation: ``"vec"`` (the process
     default — ``repro.core.arrays``, all T* candidates swept as one
-    batched array kernel) or ``"scalar"`` (this module's reference
-    loop).  Both return bit-identical plans; tests/test_arrays.py
-    enforces it.
+    batched array kernel), ``"scalar"`` (this module's reference
+    loop), or any registered backend such as ``"jax"``
+    (``repro.core.jaxplan``, jit-compiled).  vec and scalar return
+    bit-identical plans (tests/test_arrays.py enforces it); registered
+    backends match within their documented tolerance
+    (tests/test_jaxplan.py).
     """
-    if arrays.resolve_engine(engine) == "vec":
+    eng = arrays.resolve_engine(engine)
+    impl = arrays.engine_impl(eng)
+    if impl is not None:
+        return impl.stacking(services, tau_prime, delay, quality,
+                             t_star_max)
+    if eng == "vec":
         return arrays.stacking_vec(services, tau_prime, delay, quality,
                                    t_star_max)
     ids = [s.id for s in services]

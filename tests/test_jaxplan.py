@@ -1,0 +1,309 @@
+"""jax engine ("repro.core.jaxplan") equivalence against the NumPy
+reference, across every entry point the engine dispatch reaches:
+static Algorithm 1, equal_steps, offset replanning, the online and
+multi-server pipelines, the exact DP, and the batched plan_many.
+
+The contract (docs/PERFORMANCE.md, "jax engine") is *tolerance*
+equivalence of objectives — XLA may reassociate reductions and its
+``pow`` may drift in the last ulp, so candidate scores can differ by
+~1e-15 and, on exact ties, a different (equally optimal) candidate may
+win.  Plans must always satisfy the paper's constraints regardless:
+the jax engine materializes every winner through the exact NumPy
+single-level passes.  Skipped wholesale when jax is not installed.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")
+
+import repro.core.jaxplan as jaxplan
+from repro.api.registry import get_scheduler
+from repro.core import arrays
+from repro.core.delay_model import DelayModel
+from repro.core.multiserver import provision_multi
+from repro.core.offset import StackingOffset
+from repro.core.online import simulate_online
+from repro.core.optimal import optimal_mean_fid, optimal_plan
+from repro.core.quality_model import PowerLawFID
+from repro.core.service import ServiceRequest, make_scenario
+from repro.core.stacking import stacking
+
+DELAY = DelayModel()
+QUALITY = PowerLawFID()
+
+# the documented equivalence tolerance on objectives (mean FID)
+TOL = 1e-9
+
+
+def _services(taus):
+    return [ServiceRequest(id=i, deadline=float(t), spectral_eff=7.0)
+            for i, t in enumerate(taus)]
+
+
+def _tau_prime(taus):
+    return {i: float(t) for i, t in enumerate(taus)}
+
+
+def _mean_fid(plan, ids, quality=QUALITY):
+    return quality.mean_fid([plan.steps_completed[k] for k in ids])
+
+
+def _inv_se(scn, scheduler, delay, quality):
+    from repro.core.bandwidth import inv_se_allocate
+    return inv_se_allocate(scn)
+
+
+# ---------------------------------------------------------------------------
+# Registration / dispatch plumbing
+# ---------------------------------------------------------------------------
+
+class TestRegistration:
+    def test_jax_engine_registered(self):
+        assert "jax" in arrays.registered_engines()
+        assert arrays.engine_impl("jax") is jaxplan.IMPL
+
+    def test_engine_toggle_roundtrip(self):
+        prev = arrays.get_engine()
+        try:
+            arrays.set_engine("jax")
+            assert arrays.get_engine() == "jax"
+        finally:
+            arrays.set_engine(prev)
+
+    def test_engine_scope(self):
+        with arrays.engine_scope("jax"):
+            assert arrays.get_engine() == "jax"
+        assert arrays.get_engine() != "jax"
+
+    def test_unknown_engine_error_lists_jax(self):
+        with pytest.raises(ValueError, match="jax"):
+            arrays.set_engine("turbo")
+
+    def test_env_var_selects_jax(self):
+        env = dict(os.environ, REPRO_PLANNER_ENGINE="jax",
+                   PYTHONPATH="src")
+        out = subprocess.run(
+            [sys.executable, "-c",
+             "from repro.core import arrays; print(arrays.get_engine())"],
+            capture_output=True, text=True, env=env,
+            cwd=os.path.dirname(os.path.dirname(__file__)))
+        assert out.returncode == 0, out.stderr
+        assert out.stdout.strip() == "jax"
+
+    def test_jax_schedulers_registered(self):
+        assert get_scheduler("stacking_jax") is not None
+        assert get_scheduler("stacking_offset_jax") is not None
+        assert get_scheduler("offset_jax") is not None
+
+
+# ---------------------------------------------------------------------------
+# Static entry points
+# ---------------------------------------------------------------------------
+
+class TestStaticEquivalence:
+    def test_stacking_matches_vec(self):
+        rng = np.random.default_rng(0)
+        for _ in range(6):
+            K = int(rng.integers(1, 14))
+            taus = rng.uniform(0.1, 6.0, size=K)
+            svcs, tp = _services(taus), _tau_prime(taus)
+            pv = stacking(svcs, tp, DELAY, QUALITY, engine="vec")
+            pj = stacking(svcs, tp, DELAY, QUALITY, engine="jax")
+            assert abs(_mean_fid(pv, range(K))
+                       - _mean_fid(pj, range(K))) < TOL
+            pj.validate(gen_deadlines=tp)
+
+    def test_stacking_jax_scheduler_entry(self):
+        scn = make_scenario(K=10, tau_min=2.0, tau_max=6.0, seed=1)
+        tp = {s.id: s.deadline * 0.4 for s in scn.services}
+        pv = get_scheduler("stacking")(scn.services, tp, DELAY, QUALITY)
+        pj = get_scheduler("stacking_jax")(scn.services, tp, DELAY,
+                                           QUALITY)
+        ids = [s.id for s in scn.services]
+        assert abs(_mean_fid(pv, ids) - _mean_fid(pj, ids)) < TOL
+
+    def test_equal_steps_matches_vec(self):
+        sched = get_scheduler("equal_steps")
+        rng = np.random.default_rng(2)
+        for _ in range(4):
+            K = int(rng.integers(1, 12))
+            taus = rng.uniform(0.1, 6.0, size=K)
+            svcs, tp = _services(taus), _tau_prime(taus)
+            pv = sched(svcs, tp, DELAY, QUALITY)
+            with arrays.engine_scope("jax"):
+                pj = sched(svcs, tp, DELAY, QUALITY)
+            assert abs(_mean_fid(pv, range(K))
+                       - _mean_fid(pj, range(K))) < TOL
+            pj.validate(gen_deadlines=tp)
+
+
+# ---------------------------------------------------------------------------
+# Offset replanning
+# ---------------------------------------------------------------------------
+
+class TestOffsetEquivalence:
+    def test_offset_plans_match_vec(self):
+        sv, sj = StackingOffset("vec"), StackingOffset("jax")
+        rng = np.random.default_rng(3)
+        for seed in range(4):
+            K = int(rng.integers(2, 10))
+            taus = rng.uniform(0.3, 6.0, size=K)
+            svcs, tp = _services(taus), _tau_prime(taus)
+            offs = [int(x) for x in rng.integers(0, 9, K)]
+            pv = sv.plan(svcs, tp, DELAY, QUALITY, offs)
+            pj = sj.plan(svcs, tp, DELAY, QUALITY, offs)
+            from repro.core.online import _OffsetQuality
+            oq = _OffsetQuality(QUALITY, offs)
+            qv = oq.mean_fid([pv.steps_completed[k] for k in range(K)])
+            qj = oq.mean_fid([pj.steps_completed[k] for k in range(K)])
+            assert abs(qv - qj) < TOL
+
+    def test_doomed_services_match(self):
+        sv, sj = StackingOffset("vec"), StackingOffset("jax")
+        scn = make_scenario(K=5, tau_min=3.0, tau_max=8.0, seed=6)
+        tp = {s.id: s.deadline * 0.1 for s in scn.services}
+        tp[scn.services[0].id] = -0.5
+        offs = [3, 0, 2, 0, 1]
+        pv = sv.plan(scn.services, tp, DELAY, QUALITY, offs)
+        pj = sj.plan(scn.services, tp, DELAY, QUALITY, offs)
+        from repro.core.online import _OffsetQuality
+        ids = [s.id for s in scn.services]
+        oq = _OffsetQuality(QUALITY, offs)
+        oq.refresh_doomed(scn.services, tp)
+        qv = oq.mean_fid([pv.steps_completed[k] for k in ids])
+        qj = oq.mean_fid([pj.steps_completed[k] for k in ids])
+        assert abs(qv - qj) < TOL
+
+    def test_zero_offsets_delegate_to_stacking(self):
+        so = StackingOffset("jax")
+        scn = make_scenario(K=8, tau_min=2.0, tau_max=6.0, seed=7)
+        tp = {s.id: s.deadline * 0.5 for s in scn.services}
+        a = so(scn.services, tp, DELAY, QUALITY)
+        b = stacking(scn.services, tp, DELAY, QUALITY, engine="jax")
+        assert a.steps_completed == b.steps_completed
+
+
+# ---------------------------------------------------------------------------
+# Pipelines: online + multi-server
+# ---------------------------------------------------------------------------
+
+class TestPipelineEquivalence:
+    @pytest.mark.parametrize("sched_name",
+                             ["stacking", "stacking_offset"])
+    def test_online_matches_vec(self, sched_name):
+        sched = get_scheduler(sched_name)
+        for seed in range(2):
+            scn = make_scenario(K=9, tau_min=3.0, tau_max=8.0,
+                                arrival_rate=1.0, seed=seed)
+            rv = simulate_online(scn, sched, _inv_se, engine="vec")
+            rj = simulate_online(scn, sched, _inv_se, engine="jax")
+            assert abs(rv.mean_fid - rj.mean_fid) < TOL
+
+    def test_provision_multi_matches_vec(self):
+        scn = make_scenario(K=9, n_servers=3, tau_min=3.0, tau_max=8.0,
+                            server_speed_range=(0.6, 1.4), seed=0)
+        assignment = [i % 3 for i in range(scn.K)]
+        a = provision_multi(scn, assignment, stacking, _inv_se,
+                            engine="vec")
+        b = provision_multi(scn, assignment, stacking, _inv_se,
+                            engine="jax")
+        assert abs(a.mean_fid - b.mean_fid) < TOL
+
+
+# ---------------------------------------------------------------------------
+# Exact DP
+# ---------------------------------------------------------------------------
+
+class TestOptimal:
+    def test_optimal_mean_fid_matches_dp(self):
+        rng = np.random.default_rng(5)
+        for _ in range(5):
+            K = int(rng.integers(1, 7))
+            taus = [float(t) for t in rng.uniform(0.1, 3.0, size=K)]
+            v_ref = optimal_mean_fid(taus, DELAY, QUALITY)
+            v_jax = optimal_mean_fid(taus, DELAY, QUALITY, engine="jax")
+            assert abs(v_ref - v_jax) < TOL
+
+    def test_optimal_plan_achieves_bound_and_validates(self):
+        rng = np.random.default_rng(6)
+        for _ in range(4):
+            K = int(rng.integers(1, 7))
+            taus = rng.uniform(0.1, 3.0, size=K)
+            svcs, tp = _services(taus), _tau_prime(taus)
+            plan = optimal_plan(svcs, tp, DELAY, QUALITY, engine="jax")
+            bound = optimal_mean_fid([tp[k] for k in range(K)], DELAY,
+                                     QUALITY)
+            assert abs(_mean_fid(plan, range(K)) - bound) < TOL
+            plan.validate(gen_deadlines=tp)
+
+    def test_optimal_plan_refuses_large_instances(self):
+        taus = np.full(9, 2.0)
+        with pytest.raises(AssertionError):
+            optimal_plan(_services(taus), _tau_prime(taus), DELAY,
+                         QUALITY, engine="jax")
+
+
+# ---------------------------------------------------------------------------
+# Batched plan_many
+# ---------------------------------------------------------------------------
+
+class TestPlanMany:
+    def test_matches_per_scenario_vec(self):
+        S, K = 64, 8
+        taus = np.random.default_rng(7).uniform(0.2, 5.0, size=(S, K))
+        res = jaxplan.plan_many(taus, delay=DELAY, quality=QUALITY)
+        assert res.num_scenarios == S
+        for s in range(0, S, 7):
+            tp = _tau_prime(taus[s])
+            pv = arrays.stacking_vec(_services(taus[s]), tp, DELAY,
+                                     QUALITY)
+            assert abs(_mean_fid(pv, range(K)) - res.mean_fid[s]) < TOL
+
+    def test_ragged_scenarios_via_valid_mask(self):
+        # two scenarios, the second padded from K=3 to K=5
+        taus = np.array([[2.0, 3.0, 1.5, 2.5, 4.0],
+                         [2.0, 3.0, 1.5, 0.0, 0.0]])
+        valid = np.array([[True] * 5,
+                          [True, True, True, False, False]])
+        res = jaxplan.plan_many(taus, delay=DELAY, quality=QUALITY,
+                                valid=valid)
+        tp = _tau_prime(taus[1][:3])
+        pv = arrays.stacking_vec(_services(taus[1][:3]), tp, DELAY,
+                                 QUALITY)
+        assert abs(_mean_fid(pv, range(3)) - res.mean_fid[1]) < TOL
+        assert (res.steps[1, 3:] == 0).all()
+
+    def test_winning_level_materializes_to_same_counts(self):
+        S, K = 16, 6
+        taus = np.random.default_rng(8).uniform(0.2, 5.0, size=(S, K))
+        res = jaxplan.plan_many(taus, delay=DELAY, quality=QUALITY)
+        for s in range(S):
+            tp = _tau_prime(taus[s])
+            plan = arrays.stacking_pass_vec(list(range(K)), tp, DELAY,
+                                            int(res.best_level[s]))
+            got = np.array([plan.steps_completed[k] for k in range(K)])
+            assert (got == res.steps[s]).all()
+            plan.validate(gen_deadlines=tp)
+
+    def test_rejects_non_powerlaw_quality(self):
+        class Weird:
+            def fid(self, t):
+                return -t
+
+        with pytest.raises(TypeError, match="PowerLawFID"):
+            jaxplan.plan_many(np.ones((2, 3)), delay=DELAY,
+                              quality=Weird())
+
+    def test_offsets_shift_the_search(self):
+        taus = np.full((4, 5), 3.0)
+        off = np.zeros((4, 5), dtype=np.int64)
+        off[2:] = 4          # two scenarios carry prior progress
+        res = jaxplan.plan_many(taus, delay=DELAY, quality=QUALITY,
+                                offsets=off)
+        # progress-carrying scenarios score better: fid(4 + new) < fid(new)
+        assert res.mean_fid[2] < res.mean_fid[0] - 1e-6
