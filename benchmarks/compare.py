@@ -45,6 +45,26 @@ from typing import Dict, List
 DEFAULT_REL_TOL = 0.05
 DEFAULT_ABS_TOL = 1e-9
 
+# metric-name prefix -> the suite whose BENCH json should carry it,
+# so a missing gated row names the suite to re-run instead of leaving
+# the reader to reverse-engineer the naming convention
+_SUITE_PREFIXES = (
+    ("planner_", "planner_speed"),
+    ("offset_", "churn"),
+    ("churn_", "churn"),
+    ("online_", "online"),
+    ("multiserver_", "multiserver"),
+    ("api_", "api"),
+)
+
+
+def suite_of(name: str) -> str:
+    """Best-effort owning suite of a gated metric name."""
+    for prefix, suite in _SUITE_PREFIXES:
+        if name.startswith(prefix):
+            return suite
+    return "unknown"
+
 
 def load_measured(paths) -> Dict[str, float]:
     """name -> value over every row of every BENCH_*.json given."""
@@ -77,8 +97,10 @@ def compare(baseline: dict, measured: Dict[str, float]) -> List[str]:
         want = float(spec["value"])
         kind = spec.get("kind", "lower_is_better")
         if name not in measured:
-            findings.append(f"{name}: gated metric missing from "
-                            f"measured rows")
+            what = "flag" if kind == "flag" else "metric"
+            findings.append(f"{name}: missing {what} — not in any "
+                            f"measured row (suite "
+                            f"'{suite_of(name)}')")
             continue
         got = measured[name]
         if kind == "flag":

@@ -21,23 +21,41 @@ importable the suite additionally times it (docs/PERFORMANCE.md,
 "jax engine"):
 
   * ``planner_tstar_K{1024,10000}_jax_ms`` — one jitted T* search at
-    population scale, next to the matching ``_vec_ms`` rows (trend
-    data: XLA's CPU sort loses to NumPy's at K=10^4 single-scenario,
-    and the rows document exactly that);
+    population scale, next to the matching ``_vec_ms`` rows;
+  * ``planner_*_jax_compile_ms`` — jit compilation time (first call
+    minus warm call) as its own column, so the warm ``_ms`` rows and
+    every gated speedup flag measure runtime only and a cold jit
+    cache can never flake a gate;
+  * ``planner_jax_k10k_parity`` — gated flag: the jitted T* search is
+    at parity or better with vec at K=10^4 (warm, 10% margin) — the
+    radix-selection + level-chunked kernel replaced the XLA sort that
+    used to lose this row;
   * ``planner_plan_many_S1000_*`` — 1000 stacked scenarios planned in
     ONE jitted ``plan_many`` call vs the same 1000 planned by a vec
     loop, with the amortized per-scenario times;
+  * ``planner_jax_devices`` + ``planner_plan_many_S1000_sharded_ms``
+    — the device count jax exposes and the same S=1000 instance with
+    the scenario axis sharded across all of them
+    (``plan_many(devices=...)``);
   * ``planner_jax_equivalent`` — gated flag: jax objectives match the
     vec reference within ``JAX_TOL`` on every timed instance
     (tolerance, not bit identity — the documented contract);
   * ``planner_jax_batched_ok`` — gated flag: the single jitted
     ``plan_many`` call beats the vec per-scenario loop end to end at
-    S=1000 (the amortization claim of ISSUE 6).
-
-Warm-up calls run before any jax timing so jit compilation is paid
-outside the measured region; ``_ms`` rows are warm-cache numbers.
+    S=1000 (the amortization claim of ISSUE 6);
+  * ``planner_jax_sharded_ok`` — gated flag: sharded ``plan_many``
+    matches the single-device call within ``JAX_TOL`` on every
+    scenario (it is bit-identical by construction — same per-row
+    arithmetic — so the tolerance is slack, not hope);
+  * ``planner_jax_sharded_speedup_1_5x`` — gated flag: sharding is
+    >= 1.5x over single-device at S=1000 with 8 host devices (the
+    bench/nightly CI jobs export
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``); on a
+    host that physically cannot parallelize (one usable core or one
+    device) the flag passes vacuously and its derived string says so.
 """
 
+import os
 import time
 
 import numpy as np
@@ -150,7 +168,12 @@ def _run_jax(csv_rows, delay, quality, reps):
         scn = make_scenario(K=K, seed=0)
         tp = {s.id: s.deadline - 0.4 for s in scn.services}
         svcs, ids = scn.services, [s.id for s in scn.services]
-        pj = stacking(svcs, tp, delay, quality, engine="jax")  # jit warmup
+        # explicit warmup: the first call pays jit compilation, timed
+        # so it can be reported as its OWN column — warm rows and the
+        # gated flags below never include compile time
+        t0 = time.perf_counter()
+        pj = stacking(svcs, tp, delay, quality, engine="jax")
+        t_cold = time.perf_counter() - t0
         pv = stacking(svcs, tp, delay, quality, engine="vec")
         jax_equiv &= abs(_mean_fid(pv, ids, quality)
                          - _mean_fid(pj, ids, quality)) < JAX_TOL
@@ -163,8 +186,17 @@ def _run_jax(csv_rows, delay, quality, reps):
                          "Alg-1 T* search, array-native"))
         csv_rows.append((f"planner_tstar_K{K}_jax_ms", t_jx * 1e3,
                          "Alg-1 T* search, one jitted sweep (warm)"))
+        csv_rows.append((f"planner_tstar_K{K}_jax_compile_ms",
+                         max(t_cold - t_jx, 0.0) * 1e3,
+                         "jit compile share of the first call"))
         csv_rows.append((f"planner_tstar_K{K}_jax_vs_vec",
                          t_ve / max(t_jx, 1e-12), "vec_ms / jax_ms"))
+        if K >= 10_000:
+            parity = float(t_jx <= t_ve * 1.1)
+            csv_rows.append((
+                "planner_jax_k10k_parity", parity,
+                f"1=jax warm T* search within 10% of vec at K={K} "
+                f"(got {t_ve / max(t_jx, 1e-12):.2f}x vec/jax)"))
 
     # -- 1000 stacked scenarios in ONE jitted plan_many call --------------
     rng = np.random.default_rng(2)
@@ -173,9 +205,11 @@ def _run_jax(csv_rows, delay, quality, reps):
              [ServiceRequest(id=i, deadline=float(t), spectral_eff=7.0)
               for i, t in enumerate(row)])
             for row in taus]
+    t0 = time.perf_counter()
     res = jaxplan.plan_many(taus, delay=delay, quality=quality)  # warmup
+    t_cold = time.perf_counter() - t0
     t_jx = _best_of(lambda: jaxplan.plan_many(taus, delay=delay,
-                                              quality=quality), 1)
+                                              quality=quality), reps)
 
     def vec_loop():
         for tp, svcs in scns:
@@ -194,6 +228,9 @@ def _run_jax(csv_rows, delay, quality, reps):
     csv_rows.append(("planner_plan_many_S1000_jax_ms", t_jx * 1e3,
                      f"{PLAN_MANY_S} scenarios, ONE jitted plan_many "
                      f"call (warm)"))
+    csv_rows.append(("planner_plan_many_S1000_jax_compile_ms",
+                     max(t_cold - t_jx, 0.0) * 1e3,
+                     "jit compile share of the first call"))
     csv_rows.append(("planner_plan_many_S1000_per_scenario_jax_ms",
                      t_jx * 1e3 / PLAN_MANY_S,
                      "amortized jax plan time per scenario"))
@@ -208,3 +245,58 @@ def _run_jax(csv_rows, delay, quality, reps):
                      float(t_jx < t_ve),
                      "1=one jitted plan_many call beats the vec "
                      "per-scenario loop at S=1000"))
+
+    _run_jax_sharded(csv_rows, jaxplan, taus, res, delay, quality,
+                     t_jx, reps)
+
+
+def _run_jax_sharded(csv_rows, jaxplan, taus, res_single, delay,
+                     quality, t_single, reps):
+    """Sharded plan_many rows: the same S=1000 instance with the
+    scenario axis split across every device jax exposes, vs the
+    single-device call just timed (``t_single``).  Equivalence is
+    checked on EVERY scenario — the sharded path is the same per-row
+    arithmetic, so the documented tolerance is slack, not hope."""
+    import jax
+    n_dev = len(jax.devices())
+    csv_rows.append(("planner_jax_devices", float(n_dev),
+                     "jax devices visible to the sharded planner "
+                     "(bench CI exports XLA_FLAGS=--xla_force_host_"
+                     "platform_device_count=8)"))
+    t0 = time.perf_counter()
+    res_sh = jaxplan.plan_many(taus, delay=delay, quality=quality,
+                               devices=n_dev)            # warmup
+    t_cold = time.perf_counter() - t0
+    t_sh = _best_of(lambda: jaxplan.plan_many(
+        taus, delay=delay, quality=quality, devices=n_dev), reps)
+    sharded_ok = bool(
+        np.array_equal(res_single.best_level, res_sh.best_level)
+        and np.max(np.abs(res_single.mean_fid - res_sh.mean_fid))
+        < JAX_TOL)
+    speedup = t_single / max(t_sh, 1e-12)
+    # the >= 1.5x claim is about parallel hardware: on a single-core
+    # host (or a single device) sharding cannot parallelize, so the
+    # flag passes vacuously there and the derived string says so —
+    # the bench/nightly CI jobs run multi-core with 8 host devices,
+    # where the claim is actually exercised
+    cores = len(os.sched_getaffinity(0)) if hasattr(os,
+                                                    "sched_getaffinity") \
+        else (os.cpu_count() or 1)
+    parallel_host = n_dev >= 2 and cores >= 2
+    why = (f"got {speedup:.2f}x on {n_dev} device(s)" if parallel_host
+           else f"vacuous: {cores} usable core(s) / {n_dev} device(s) "
+                f"cannot parallelize (measured {speedup:.2f}x)")
+    csv_rows.append(("planner_plan_many_S1000_sharded_ms", t_sh * 1e3,
+                     f"S=1000 plan_many sharded over {n_dev} "
+                     f"device(s) (warm)"))
+    csv_rows.append(("planner_plan_many_S1000_sharded_compile_ms",
+                     max(t_cold - t_sh, 0.0) * 1e3,
+                     "jit compile share of the first sharded call"))
+    csv_rows.append(("planner_jax_sharded_ok", float(sharded_ok),
+                     f"1=sharded plan_many matches single-device "
+                     f"within {JAX_TOL:g} on all scenarios "
+                     f"({n_dev} device(s))"))
+    csv_rows.append(("planner_jax_sharded_speedup_1_5x",
+                     float(speedup >= 1.5 or not parallel_host),
+                     f"1=sharded >= 1.5x single-device at S=1000 "
+                     f"({why})"))

@@ -89,6 +89,24 @@ def git_sha() -> str:
         return "unknown"
 
 
+def device_count() -> int:
+    """jax devices visible to this process (0 = jax not importable):
+    stamped into BENCH_*.json so sharded-planner rows can be read in
+    context — a 1-device artifact and an 8-device artifact are not
+    comparable speedup-wise."""
+    global _DEVICE_COUNT
+    if _DEVICE_COUNT is None:
+        try:
+            import jax
+            _DEVICE_COUNT = len(jax.devices())
+        except Exception:   # noqa: BLE001 — absent or broken backend
+            _DEVICE_COUNT = 0
+    return _DEVICE_COUNT
+
+
+_DEVICE_COUNT = None
+
+
 def write_json(out_dir: Path, suite: str, rows, elapsed_s: float,
                sha: str, workers: int = 1) -> Path:
     from repro.core import arrays
@@ -104,6 +122,8 @@ def write_json(out_dir: Path, suite: str, rows, elapsed_s: float,
         # the active planner engine (vec/scalar/jax, process default at
         # write time) so baseline refreshes can tell engine trends apart
         "engine": arrays.get_engine(),
+        # jax device count (0 = no jax), next to engine/workers
+        "devices": device_count(),
         "rows": [{"name": n, "value": v, "derived": d}
                  for n, v, d in rows],
     }

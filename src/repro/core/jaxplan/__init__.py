@@ -18,6 +18,9 @@ Layout:
   sites call through ``arrays.engine_impl("jax")``.
 * ``batched``  — ``plan_many``: the whole T* search vmapped over
   ~10^3 stacked scenarios in one jitted call.
+* ``sharded``  — ``plan_many_sharded``: the scenario axis split across
+  devices with ``shard_map`` (``plan_many(..., devices=...)`` routes
+  here; pmap fallback on older jax).
 * ``optimal``  — the exact DP as a jitted breadth-first sweep.
 
 Equivalence contract: objectives match the NumPy reference within the
@@ -34,10 +37,11 @@ import types
 import jax as _jax  # noqa: F401 — fail fast (ImportError) when absent
 
 from repro.core import arrays as _arrays
-from repro.core.jaxplan import backend, batched, kernels, optimal
+from repro.core.jaxplan import backend, batched, kernels, optimal, sharded
 from repro.core.jaxplan.backend import equal_steps, offset_plan, stacking
 from repro.core.jaxplan.batched import PlanManyResult, plan_many
 from repro.core.jaxplan.optimal import optimal_mean_fid, optimal_plan
+from repro.core.jaxplan.sharded import plan_many_sharded, resolve_devices
 
 #: what ``arrays.engine_impl("jax")`` hands to the dispatch sites
 IMPL = types.SimpleNamespace(
@@ -48,6 +52,7 @@ IMPL = types.SimpleNamespace(
     optimal_plan=optimal_plan,
     optimal_mean_fid=optimal_mean_fid,
     plan_many=plan_many,
+    plan_many_sharded=plan_many_sharded,
 )
 
 _arrays.register_engine("jax", IMPL)
@@ -64,5 +69,8 @@ __all__ = [
     "optimal_mean_fid",
     "optimal_plan",
     "plan_many",
+    "plan_many_sharded",
+    "resolve_devices",
+    "sharded",
     "stacking",
 ]

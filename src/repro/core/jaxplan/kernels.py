@@ -29,7 +29,6 @@ variants instead of recompiling per instant.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional, Tuple
 
 import numpy as np
@@ -48,24 +47,116 @@ _TP_INF = np.int64(1) << 62
 
 
 def _bucket(n: int) -> int:
-    """Round up to a power of two (min 8): the padded-shape buckets
-    that bound jit recompilation across shrinking replan instances."""
-    return max(8, 1 << max(0, int(n - 1).bit_length()))
+    """Padded-shape buckets that bound jit recompilation across
+    shrinking replan instances: powers of two (min 8) up to 4096 —
+    the regime online replans churn through — then multiples of 2048,
+    where population-scale sweeps would otherwise pay up to 2x padding
+    for one extra compiled variant (K=10^4 pads to 10240, not 16384)."""
+    if n <= 4096:
+        return max(8, 1 << max(0, int(n - 1).bit_length()))
+    return 2048 * ((int(n) + 2047) // 2048)
+
+
+# -------------------------------------------------------------------------
+# Per-round selection: the x_n-th smallest composite key, sort-free
+# -------------------------------------------------------------------------
+#
+# The batching step needs ONE number per candidate row: the x_n-th
+# smallest composite key (``Tp * M + tie``), which is the membership
+# threshold of the round's batch.  A full ``jnp.sort`` over the (L, K)
+# key table delivers it but dominates the whole kernel at K = 10^4 on
+# CPU (XLA's sort is scalar per row; NumPy's beats it, which is why
+# the single-scenario jax row used to lose to vec at that size).  The
+# keys are bounded non-negative integers with a host-computable bit
+# width, so a bitwise (radix) *selection* finds the same threshold in
+# ``key_bits`` fused compare-and-count passes — no ordering of the
+# inactive tail, no data movement, and it vectorizes over every
+# candidate row and (under vmap) every scenario at once.
+
+def _select_kth_key(key, x_n, key_bits):
+    """The ``x_n``-th smallest value of ``key`` along the last axis,
+    per row, via bitwise binary search: the largest ``T`` with
+    ``count(key < T) < x_n`` over a monotone predicate IS that order
+    statistic when keys are unique integers (they are: every active
+    key embeds a distinct tie rank, and x_n never exceeds the active
+    count, so the sentinel tail is never selected).  ``key_bits`` (a
+    static python int) bounds the real-key domain; rows with
+    ``x_n == 0`` return 0 and must be masked by the caller (the scalar
+    path's ``thr = -1`` rule)."""
+
+    one = jnp.ones((), dtype=key.dtype)
+
+    def bit_step(i, thr):
+        bit = (key_bits - 1 - i).astype(key.dtype)
+        cand = thr | jnp.left_shift(one, bit)
+        cnt = jnp.sum(key < cand[..., None], axis=-1, dtype=jnp.int64)
+        return jnp.where(cnt < x_n, cand, thr)
+
+    thr0 = jnp.zeros(key.shape[:-1], dtype=key.dtype)
+    return lax.fori_loop(0, key_bits, bit_step, thr0)
+
+
+def _sort_kth_key(key, x_n):
+    """Reference selection via the full composite-key sort (the
+    pre-sharding scheme), kept for the decision-identity property
+    tests in tests/test_jaxplan_properties.py."""
+    sorted_key = jnp.sort(key, axis=-1)
+    return jnp.take_along_axis(sorted_key,
+                               jnp.maximum(x_n - 1, 0)[..., None],
+                               axis=-1)[..., 0]
+
+
+def _key_bits(taup0: np.ndarray, off: np.ndarray, shift: int,
+              step_cost: float) -> int:
+    """Static bit width of the composite-key domain for a (possibly
+    scenario-stacked) instance: real keys are ``Tp * M + tie`` with
+    ``Tp <= tp_bound`` (the same bound ``_f_threshold`` clamps to), so
+    every active key fits in this many bits and the radix selection's
+    trip count is a host-side constant the jit cache can key on."""
+    M = np.int64(1) << np.int64(shift)
+    te0_max = np.int64(np.max(np.maximum(taup0, 0.0), initial=0.0)
+                       / step_cost)
+    tp_bound = np.int64(np.max(off, initial=0) if off.size else 0) \
+        + 2 * te0_max + 4
+    return max(1, int((tp_bound + 1) * M - 1).bit_length())
 
 
 # -------------------------------------------------------------------------
 # The clustered (Algorithm-1) sweep
 # -------------------------------------------------------------------------
 
-def _clustered_core(taup0, off, levels, tie, f_thr, shift, a, b):
-    """One scenario's Algorithm-1 rounds over all L candidate levels:
-    ``(taup0 (K,), off (K,), levels (L,), tie (K,), f_thr (L,))`` ->
-    ``(Tc (L, K) int64, makespan (L,) float64)``.  Literal port of
-    ``arrays._clustered_rounds`` minus history recording."""
+#: level rows per independently-converging while_loop (divides every
+#: ``_bucket`` size).  Per-level round counts are heavily skewed — deep
+#: levels converge in 2-4 rounds while shallow ones take 30+ — so one
+#: lockstep loop over all L rows pays max_rounds * L row-rounds.
+#: Chunking the level axis into CHUNK-row loops (run sequentially by
+#: ``lax.map``) pays only sum(chunk_max * CHUNK), a ~3x cut at K=10^4,
+#: and makes the L padding nearly free (pad chunks converge instantly).
+_LEVEL_CHUNK = 4
+
+
+def _clustered_chunk(taup0, off, levels, tie, f_thr, shift, a, b,
+                     key_bits):
+    """One scenario's Algorithm-1 rounds over one chunk of candidate
+    levels: ``(taup0 (K,), off (K,), levels (Lc,), tie (K,), f_thr
+    (Lc,))`` -> ``(Tc (Lc, K) int64, makespan (Lc,) float64)``.
+    Literal port of ``arrays._clustered_rounds`` minus history
+    recording, with the per-round full sort replaced by the
+    decision-identical radix selection (``key_bits`` is the static
+    trip count)."""
     L, K = levels.shape[0], taup0.shape[0]
     g1 = a * 1 + b                       # delay.min_task_delay()
     step_cost = a + b
-    M = jnp.left_shift(jnp.int64(1), shift)
+    # composite keys fit in ``key_bits`` (static, host-derived), so the
+    # integer round state — keys, counts, Tp — runs in int32 whenever
+    # the domain allows: identical integer arithmetic, half the memory
+    # traffic of int64 on the K=10^4 sweeps the radix selection serves
+    idt = jnp.int32 if key_bits <= 31 else jnp.int64
+    sent = jnp.asarray(jnp.iinfo(idt).max, idt)  # past every real key
+    M = (jnp.int64(1) << shift).astype(idt)
+    tie_i = tie.astype(idt)
+    f_thr_i = f_thr.astype(idt)          # values bounded by key_bits
+    off_i = off.astype(idt)
 
     lv_pos = levels > 0
     lv_f = levels.astype(jnp.float64)
@@ -73,7 +164,7 @@ def _clustered_core(taup0, off, levels, tie, f_thr, shift, a, b):
     a_lv = a * jnp.maximum(lv_f, 1.0)
 
     taup = jnp.tile(taup0, (L, 1))
-    Tc = jnp.zeros((L, K), dtype=jnp.int64)
+    Tc = jnp.zeros((L, K), dtype=idt)
     active = jnp.tile(taup0 >= g1, (L, 1))
     t = jnp.zeros((L,), dtype=jnp.float64)
 
@@ -84,12 +175,12 @@ def _clustered_core(taup0, off, levels, tie, f_thr, shift, a, b):
     def body(state):
         taup, Tc, active, t = state
         # ---- clustering (Eqs. 15-18, offset-shifted) -----------------
-        Te = (taup / step_cost).astype(jnp.int64)
-        Tp = off[None, :] + Tc + Te
-        key = jnp.where(active, Tp * M + tie[None, :], _TP_INF)
+        Te = (taup / step_cost).astype(idt)
+        Tp = off_i[None, :] + Tc + Te
+        key = jnp.where(active, Tp * M + tie_i[None, :], sent)
 
         n_active = active.sum(axis=-1, dtype=jnp.int64)
-        F = key <= f_thr[:, None]
+        F = key <= f_thr_i[:, None]
         n_F = F.sum(axis=-1, dtype=jnp.int64)
 
         # ---- packing (Eqs. 19-20) ------------------------------------
@@ -97,7 +188,7 @@ def _clustered_core(taup0, off, levels, tie, f_thr, shift, a, b):
         tau_min = jnp.min(jnp.where(F, taup, jnp.inf), axis=-1)
         cap_f = jnp.floor((tau_min - b * te_max)
                           / (a * jnp.maximum(te_max, 1)))
-        tp_min = jnp.right_shift(key.min(axis=-1), shift)
+        tp_min = jnp.right_shift(key.min(axis=-1), shift.astype(idt))
         cap_nf = jnp.floor((step_cost * tp_min - b_lv) / a_lv)
         x_f = jnp.where(te_max > 0,
                         jnp.maximum(n_F, jnp.minimum(n_active, cap_f)),
@@ -110,11 +201,10 @@ def _clustered_core(taup0, off, levels, tie, f_thr, shift, a, b):
         x_n = jnp.where(n_active > 0, x_n, 0).astype(jnp.int64)
 
         # ---- batching -------------------------------------------------
-        sorted_key = jnp.sort(key, axis=-1)
-        thr = jnp.take_along_axis(sorted_key,
-                                  jnp.maximum(x_n - 1, 0)[:, None],
-                                  axis=-1)[:, 0]
-        thr = jnp.where(x_n > 0, thr, jnp.int64(-1))
+        # membership threshold = the x_n-th smallest key, selected
+        # without sorting (see _select_kth_key above)
+        thr = _select_kth_key(key, x_n, key_bits)
+        thr = jnp.where(x_n > 0, thr, jnp.asarray(-1, idt))
         packed0 = key <= thr[:, None]
 
         def drop_cond(s):
@@ -139,13 +229,36 @@ def _clustered_core(taup0, off, levels, tie, f_thr, shift, a, b):
         t = t + jnp.where(has_batch, g, 0.0)
         adv = active & has_batch[:, None]   # wall clock advances for all
         taup = taup - jnp.where(adv, g[:, None], 0.0)      # (Eq. 15)
-        Tc = Tc + packed.astype(jnp.int64)
+        Tc = Tc + packed.astype(idt)
         # services that can no longer fit even a dedicated batch are done
         active = active & (taup + 1e-12 >= g1)
         return taup, Tc, active, t
 
     _, Tc, _, t = lax.while_loop(cond, body, (taup, Tc, active, t))
-    return Tc, t
+    return Tc.astype(jnp.int64), t
+
+
+def _clustered_core(taup0, off, levels, tie, f_thr, shift, a, b,
+                    key_bits):
+    """All L candidate levels, as ``_LEVEL_CHUNK``-row chunks swept
+    sequentially (``lax.map``) so each chunk's while_loop stops when
+    ITS levels converge instead of riding along to the globally
+    slowest row.  Row arithmetic is identical to one big lockstep
+    loop — chunks are independent level rows of the same instance."""
+    L, K = levels.shape[0], taup0.shape[0]
+    if L % _LEVEL_CHUNK:                  # non-bucket L: one lockstep loop
+        return _clustered_chunk(taup0, off, levels, tie, f_thr, shift,
+                                a, b, key_bits)
+    C = L // _LEVEL_CHUNK
+
+    def one_chunk(xs):
+        lv_c, f_thr_c = xs
+        return _clustered_chunk(taup0, off, lv_c, tie, f_thr_c, shift,
+                                a, b, key_bits)
+
+    Tc, t = lax.map(one_chunk, (levels.reshape(C, _LEVEL_CHUNK),
+                                f_thr.reshape(C, _LEVEL_CHUNK)))
+    return Tc.reshape(L, K), t.reshape(L)
 
 
 # -------------------------------------------------------------------------
@@ -285,7 +398,7 @@ def _pad_tail(arr: np.ndarray, n: int, value) -> np.ndarray:
     return np.pad(arr, pad, constant_values=value)
 
 
-_clustered_jit = jax.jit(_clustered_core)
+_clustered_jit = jax.jit(_clustered_core, static_argnums=(8,))
 _lockstep_jit = jax.jit(_lockstep_core)
 
 
@@ -312,9 +425,10 @@ def clustered_counts(taup0: np.ndarray, off: np.ndarray,
                   int(np.max(ids, initial=0)) + 1)
     tie = _tie_ranks(taup_p, ids_p)
     f_thr = _f_threshold(taup_p, off_p, lv_p, int(shift), delay.a + delay.b)
+    kb = _key_bits(taup_p, off_p, int(shift), delay.a + delay.b)
     with enable_x64():
         Tc, t = _clustered_jit(taup_p, off_p, lv_p, tie, f_thr, shift,
-                               delay.a, delay.b)
+                               delay.a, delay.b, kb)
     return np.asarray(Tc)[:L, :K], np.asarray(t)[:L]
 
 
@@ -356,16 +470,18 @@ def powerlaw_scores(Tc: np.ndarray, quality, offsets: Optional[np.ndarray],
 _powerlaw_jit = jax.jit(_powerlaw_rows)
 
 
-# One fused jitted T* search over S stacked scenarios: vmapped
-# clustered sweep -> masked power-law scoring -> first-best scan, all
-# in a single call (the ``plan_many`` core).
-@partial(jax.jit, static_argnums=())
-def _plan_many_core(taup0, off, valid, tie, f_thr, levels, shift,
-                    a, b, alpha, beta, gamma, fid0):
+# One fused T* search over S stacked scenarios: vmapped clustered
+# sweep -> masked power-law scoring -> first-best scan, all in a
+# single call.  ``_plan_many_block`` is the unjitted body so the
+# sharded entry point (repro.core.jaxplan.sharded) can wrap the SAME
+# computation in shard_map/pmap per device; ``_plan_many_core`` is the
+# single-device jit (the ``plan_many`` core).
+def _plan_many_block(taup0, off, valid, tie, f_thr, levels, shift,
+                     a, b, alpha, beta, gamma, fid0, key_bits):
     Tc, t = jax.vmap(
         _clustered_core,
-        in_axes=(0, 0, None, 0, 0, None, None, None))(
-            taup0, off, levels, tie, f_thr, shift, a, b)
+        in_axes=(0, 0, None, 0, 0, None, None, None, None))(
+            taup0, off, levels, tie, f_thr, shift, a, b, key_bits)
     qs = jax.vmap(_powerlaw_rows,
                   in_axes=(0, 0, 0, None, None, None, None, None))(
         Tc, off, valid, jnp.zeros(taup0.shape[-1], bool),
@@ -377,3 +493,6 @@ def _plan_many_core(taup0, off, valid, tie, f_thr, levels, shift,
     counts = jnp.take_along_axis(Tc, idx[:, None, None], axis=1)[:, 0, :]
     ms = jnp.take_along_axis(t, idx[:, None], axis=1)[:, 0]
     return best_i, counts, best_q, ms
+
+
+_plan_many_core = jax.jit(_plan_many_block, static_argnums=(13,))

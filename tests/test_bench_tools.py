@@ -69,6 +69,35 @@ class TestCompareGate:
         findings = compare.compare(BASELINE, compare.load_measured([p]))
         assert any("missing" in f for f in findings)
 
+    def test_missing_flag_reports_suite_not_keyerror(self, tmp_path):
+        """A gated FLAG absent from the artifacts (vs merely 0) must
+        come back as a readable 'missing flag' finding naming the
+        owning suite — never a KeyError."""
+        base = {"metrics": {
+            "planner_jax_sharded_ok": {"value": 1.0, "kind": "flag"},
+            "churn_handoff_sane": {"value": 1.0, "kind": "flag"},
+        }}
+        p = _bench_file(tmp_path, "online",
+                        [("online_r0.5_stacking", 6.0, "")])
+        findings = compare.compare(base, compare.load_measured([p]))
+        assert len(findings) == 2
+        sharded = next(f for f in findings
+                       if "planner_jax_sharded_ok" in f)
+        assert "missing flag" in sharded
+        assert "suite 'planner_speed'" in sharded
+        churn = next(f for f in findings if "churn_handoff_sane" in f)
+        assert "missing flag" in churn
+        assert "suite 'churn'" in churn
+
+    def test_suite_of_prefix_map(self):
+        assert compare.suite_of("planner_tstar_K64_vec_ms") \
+            == "planner_speed"
+        assert compare.suite_of("offset_beats_shared_under_churn") \
+            == "churn"
+        assert compare.suite_of("multiserver_greedy") == "multiserver"
+        assert compare.suite_of("api_schedulers") == "api"
+        assert compare.suite_of("something_else") == "unknown"
+
     def test_unknown_kind_fails(self):
         base = {"metrics": {"x": {"value": 1.0, "kind": "sideways"}}}
         assert compare.compare(base, {"x": 1.0})
