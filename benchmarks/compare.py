@@ -17,9 +17,17 @@ that regresses the scheduler-vs-baseline numbers fails visibly.
 
   * ``lower_is_better`` — fail when measured >
     value * (1 + rel_tol) + abs_tol (FID-style metrics; improvements
-    always pass).
+    always pass).  A per-row ``tolerance`` key overrides the 5%
+    default relative tolerance (and any ``rel_tol``) — use it to
+    tighten deterministic rows or loosen noisy ones without touching
+    the global default; ``--update`` round-trips it.
   * ``flag``            — fail when measured < value (ordering claims
     pinned at 1.0 must stay 1.0).
+
+``--github-summary`` additionally appends the whole gate table as
+markdown to ``$GITHUB_STEP_SUMMARY`` (stdout when the env var is
+unset), so the PR checks page shows per-metric baseline/measured/limit
+without digging through job logs.
 
 A gated metric missing from the measured rows fails too — a suite that
 silently stops emitting its numbers is itself a regression.  The
@@ -38,6 +46,7 @@ keeps stale values.
 
 import argparse
 import json
+import os
 import sys
 from pathlib import Path
 from typing import Dict, List
@@ -54,6 +63,7 @@ _SUITE_PREFIXES = (
     ("churn_", "churn"),
     ("online_", "online"),
     ("multiserver_", "multiserver"),
+    ("fleet_", "fleet"),
     ("api_", "api"),
 )
 
@@ -64,6 +74,20 @@ def suite_of(name: str) -> str:
         if name.startswith(prefix):
             return suite
     return "unknown"
+
+
+def gate_limit(spec: dict):
+    """(rel_tol, abs_tol, limit) of one ``lower_is_better`` gate spec.
+
+    ``tolerance`` is the per-row relative-tolerance override (it wins
+    over the older ``rel_tol`` spelling when both appear); without
+    either the 5% default applies.  ``--update`` round-trips every
+    spec key, so a tightened row stays tightened across refreshes.
+    """
+    rel = float(spec.get("tolerance",
+                         spec.get("rel_tol", DEFAULT_REL_TOL)))
+    abs_tol = float(spec.get("abs_tol", DEFAULT_ABS_TOL))
+    return rel, abs_tol, float(spec["value"]) * (1.0 + rel) + abs_tol
 
 
 def load_measured(paths) -> Dict[str, float]:
@@ -108,9 +132,7 @@ def compare(baseline: dict, measured: Dict[str, float]) -> List[str]:
                 findings.append(f"{name}: flag dropped to {got:g} "
                                 f"(baseline {want:g})")
         elif kind == "lower_is_better":
-            rel = float(spec.get("rel_tol", DEFAULT_REL_TOL))
-            abs_tol = float(spec.get("abs_tol", DEFAULT_ABS_TOL))
-            limit = want * (1.0 + rel) + abs_tol
+            rel, abs_tol, limit = gate_limit(spec)
             if got > limit:
                 findings.append(
                     f"{name}: {got:.4f} > {limit:.4f} "
@@ -135,6 +157,57 @@ def update_baseline(baseline: dict,
     return out
 
 
+def github_summary(baseline: dict, measured: Dict[str, float],
+                   suite_findings: List[str]) -> str:
+    """The gate outcome as a GitHub step-summary markdown table —
+    one row per gated metric, findings (missing suites/rows) called
+    out above it.  Pure rendering: the pass/fail decision is the same
+    ``compare`` logic the exit code uses."""
+    lines = []
+    n_fail = 0
+    for name, spec in baseline.get("metrics", {}).items():
+        want = float(spec["value"])
+        kind = spec.get("kind", "lower_is_better")
+        if name not in measured:
+            lines.append(f"| `{name}` | {kind} | {want:g} | _missing_ "
+                         f"| — | ❌ |")
+            n_fail += 1
+            continue
+        got = measured[name]
+        if kind == "flag":
+            ok, limit = got >= want, f">= {want:g}"
+        else:
+            _, _, lim = gate_limit(spec)
+            ok, limit = got <= lim, f"<= {lim:.4f}"
+        n_fail += not ok
+        lines.append(f"| `{name}` | {kind} | {want:.4f} | {got:.4f} "
+                     f"| {limit} | {'✅' if ok else '❌'} |")
+    gated = len(baseline.get("metrics", {}))
+    failed = n_fail + len(suite_findings)
+    verdict = ("**PASSED** — all gates hold" if failed == 0 else
+               f"**FAILED** — {failed} finding(s)")
+    out = ["### Benchmark regression gate", "", verdict, ""]
+    out += [f"- ⚠️ {f}" for f in suite_findings]
+    if suite_findings:
+        out.append("")
+    out += [f"{gated} gated metric(s):", "",
+            "| metric | kind | baseline | measured | gate | ok |",
+            "|---|---|---:|---:|---|:---:|"]
+    out += lines
+    return "\n".join(out) + "\n"
+
+
+def _emit_summary(text: str) -> None:
+    """Append to ``$GITHUB_STEP_SUMMARY`` when CI provides it, else
+    print (local runs still get the table)."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if path:
+        with open(path, "a", encoding="utf-8") as fh:
+            fh.write(text)
+    else:
+        print(text, end="")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("bench", nargs="+", help="BENCH_*.json files")
@@ -142,6 +215,9 @@ def main(argv=None) -> int:
     ap.add_argument("--update", action="store_true",
                     help="rewrite the baseline's values from the "
                          "measured rows instead of gating")
+    ap.add_argument("--github-summary", action="store_true",
+                    help="append the gate table (markdown) to "
+                         "$GITHUB_STEP_SUMMARY (stdout when unset)")
     args = ap.parse_args(argv)
 
     baseline = json.loads(Path(args.baseline).read_text())
@@ -169,6 +245,10 @@ def main(argv=None) -> int:
             json.dumps(refreshed, indent=2) + "\n")
         print(f"baseline refreshed: {args.baseline}")
         return 0
+
+    if args.github_summary:
+        _emit_summary(github_summary(baseline, measured,
+                                     suite_findings))
 
     findings = suite_findings + compare(baseline, measured)
     gated = len(baseline.get("metrics", {}))

@@ -1,0 +1,170 @@
+"""Fleet suite: population-scale simulation throughput + the
+equivalence and memory contracts of ``repro.core.fleet``.
+
+Three claims, each pinned by a flag in ``benchmarks/baseline.json``:
+
+  * ``fleet_matches_multiserver`` — a small heterogeneous fleet run in
+    ``mode="event"`` reproduces ``simulate_online_multi`` (the
+    object-graph simulator) on the identical workload within 1e-9
+    mean FID, for both closed-form allocators.  The fleet harness is a
+    re-implementation for scale, not a new model — this row is the
+    proof.
+  * ``fleet_1m_services_ok`` — the epoch-mode scale run completes with
+    every arrival accounted for (admitted + rejected == arrivals,
+    completed == admitted) at the target population.  The blocking CI
+    job runs the reduced target (~1e5 services); the nightly job sets
+    ``FLEET_FULL=1`` for the full >= 10^6.
+  * ``fleet_bounded_memory`` — quadrupling the horizon at a fixed
+    epoch width and arrival rate leaves the peak number of
+    concurrently-held service rows flat (within 2x), i.e. memory is
+    bounded by the epoch working set, never by the total population.
+
+Throughput rows (``fleet_services_per_s``, ``fleet_peak_rss_mb``) are
+informational — wall-clock and RSS vary across runners, so they are
+recorded in docs/PERFORMANCE.md but not gated.
+"""
+
+import os
+import resource
+import sys
+import time
+
+from repro.core.bandwidth import equal_allocate, inv_se_allocate
+from repro.core.fleet import (FleetCell, FleetScenario, fleet_to_scenario,
+                              simulate_fleet)
+from repro.core.multiserver import simulate_online_multi
+from repro.core.stacking import stacking
+from repro.core.traffic import PoissonProcess
+
+#: reduced target for the blocking CI job; FLEET_FULL=1 (nightly) runs
+#: the paper-scale >= 10^6 population instead
+REDUCED_SERVICES = 100_000
+FULL_SERVICES = 1_000_000
+
+
+def _peak_rss_mb() -> float:
+    """Process-lifetime peak resident set, MB (``ru_maxrss`` is KB on
+    Linux, bytes on macOS)."""
+    peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    div = 1024.0 ** 2 if sys.platform == "darwin" else 1024.0
+    return peak / div
+
+
+def _equivalence(csv_rows) -> None:
+    """Event-mode fleet vs simulate_online_multi on the same workload."""
+    worst = 0.0
+    ok = True
+    for alloc_name, core_alloc in (
+            ("equal", lambda scn, *a, **k: equal_allocate(scn)),
+            ("inv_se", lambda scn, *a, **k: inv_se_allocate(scn))):
+        cells = [FleetCell(bandwidth_hz=1.2e6 * (c + 1),
+                           speed=1.0 + 0.25 * c,
+                           process=PoissonProcess(2.0))
+                 for c in range(3)]
+        fleet = FleetScenario(cells=cells, horizon=8.0, seed=11)
+        res = simulate_fleet(fleet, allocator=alloc_name, mode="event")
+        scn, assignment = fleet_to_scenario(fleet)
+        cell_of = {s.id: assignment[i]
+                   for i, s in enumerate(scn.services)}
+        ref = simulate_online_multi(
+            scn, stacking, core_alloc,
+            placement=lambda svc, sim: cell_of[svc.id], engine="vec")
+        dq = abs(res.mean_fid - ref.mean_fid)
+        worst = max(worst, dq)
+        ok &= dq <= 1e-9 and res.admitted == len(ref.outcomes)
+        csv_rows.append((f"fleet_event_{alloc_name}_fid", res.mean_fid,
+                         f"ref={ref.mean_fid:.9f},diff={dq:.2e},"
+                         f"K={len(scn.services)}"))
+    csv_rows.append(("fleet_matches_multiserver", float(ok),
+                     f"1=event-mode fleet == simulate_online_multi "
+                     f"within 1e-9 (worst diff {worst:.2e})"))
+
+
+def _scale(csv_rows, full: bool) -> None:
+    """The big epoch-mode run: throughput, accounting, peak RSS."""
+    target = FULL_SERVICES if full else REDUCED_SERVICES
+    # expected arrivals = n_cells * rate * horizon, sized ~5% above the
+    # target so Poisson fluctuation cannot undershoot it
+    n_cells = 512 if full else 128
+    rate = 2.0
+    horizon = (1.025 * target) / (n_cells * rate)
+    fleet = FleetScenario(
+        cells=tuple(FleetCell(bandwidth_hz=8.0e6,
+                              process=PoissonProcess(rate))
+                    for _ in range(n_cells)),
+        horizon=horizon, seed=0)
+    t0 = time.time()
+    res = simulate_fleet(fleet, allocator="inv_se", mode="epoch",
+                         epoch=horizon / 64.0)
+    wall = time.time() - t0
+    accounted = (res.admitted + res.rejected == res.arrivals
+                 and res.completed == res.admitted)
+    label = "full" if full else "reduced"
+    csv_rows.append(("fleet_services", float(res.arrivals),
+                     f"{label},target={target},cells={n_cells},"
+                     f"horizon={horizon:.1f}"))
+    csv_rows.append(("fleet_services_per_s", res.arrivals / wall,
+                     f"wall={wall:.2f}s,mean_fid={res.mean_fid:.3f},"
+                     f"planner_calls={res.planner_calls}"))
+    csv_rows.append(("fleet_peak_live_rows", float(res.peak_live_rows),
+                     f"arrivals={res.arrivals}"))
+    csv_rows.append(("fleet_peak_rss_mb", _peak_rss_mb(),
+                     f"{label},ru_maxrss"))
+    csv_rows.append(("fleet_1m_services_ok",
+                     float(accounted and res.arrivals >= target),
+                     f"1={label} run >= {target} services, all "
+                     f"accounted (admitted+rejected==arrivals, "
+                     f"completed==admitted)"))
+
+
+def _bounded_memory(csv_rows) -> None:
+    """Peak live rows must track the epoch working set, not the
+    horizon: 4x the horizon at fixed epoch width and rate may not even
+    double the peak."""
+    peaks = {}
+    for horizon in (50.0, 200.0):
+        fleet = FleetScenario(
+            cells=tuple(FleetCell(bandwidth_hz=1.5e6,
+                                  process=PoissonProcess(2.0))
+                        for _ in range(32)),
+            horizon=horizon, seed=7)
+        res = simulate_fleet(fleet, mode="epoch", epoch=5.0)
+        peaks[horizon] = res.peak_live_rows
+        csv_rows.append((f"fleet_peak_rows_h{horizon:g}",
+                         float(res.peak_live_rows),
+                         f"arrivals={res.arrivals},epoch=5"))
+    bounded = peaks[200.0] <= 2 * peaks[50.0]
+    csv_rows.append(("fleet_bounded_memory", float(bounded),
+                     f"1=peak rows flat under 4x horizon "
+                     f"({peaks[50.0]} -> {peaks[200.0]})"))
+
+
+def _engine_parity(csv_rows) -> None:
+    """Batched-replan path (jax ``replan_many``) vs the vec loop on a
+    moderate epoch-mode fleet — informational row; the 1e-9 contract
+    itself is test-enforced (tests/test_fleet.py)."""
+    fleet = FleetScenario(
+        cells=tuple(FleetCell(bandwidth_hz=2.0e6,
+                              process=PoissonProcess(5.0))
+                    for _ in range(20)),
+        horizon=50.0, seed=1)
+    ref = simulate_fleet(fleet, mode="epoch", engine="vec")
+    try:
+        res = simulate_fleet(fleet, mode="epoch", engine="jax")
+    except (ImportError, ValueError) as exc:   # pragma: no cover
+        csv_rows.append(("fleet_jax_vs_vec_fid_diff", 0.0,
+                         f"jax engine unavailable: {exc}"))
+        return
+    dq = abs(res.mean_fid - ref.mean_fid)
+    csv_rows.append(("fleet_jax_vs_vec_fid_diff", dq,
+                     f"vec={ref.mean_fid:.9f},jax={res.mean_fid:.9f},"
+                     f"batched_calls={res.planner_calls} vs "
+                     f"{ref.planner_calls}"))
+
+
+def run(csv_rows):
+    full = os.environ.get("FLEET_FULL", "") not in ("", "0")
+    _equivalence(csv_rows)
+    _scale(csv_rows, full)
+    _bounded_memory(csv_rows)
+    _engine_parity(csv_rows)

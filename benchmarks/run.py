@@ -1,6 +1,6 @@
 """Benchmark driver: one module per paper figure/table plus the
-roofline, online-admission, multi-server, churn, planner-speed and
-beyond-paper suites.  Prints ``name,us_per_call,derived`` CSV.
+roofline, online-admission, multi-server, churn, fleet, planner-speed
+and beyond-paper suites.  Prints ``name,us_per_call,derived`` CSV.
 
     python -m benchmarks.run [--only fig1a,fig2b,online,planner_speed,..]
     python -m benchmarks.run --list
@@ -31,7 +31,7 @@ from pathlib import Path
 from benchmarks import (ablations, beyond_paper, churn,
                         fig1a_delay_vs_batch, fig1b_fid_vs_steps,
                         fig2a_e2e_delay, fig2b_fid_vs_services,
-                        fig2c_fid_vs_min_delay, kernels_bench,
+                        fig2c_fid_vs_min_delay, fleet, kernels_bench,
                         multiserver, online_admission, planner_speed,
                         roofline_report)
 
@@ -70,6 +70,7 @@ SUITES = {
     "online": online_admission.run,
     "multiserver": multiserver.run,
     "churn": churn.run,
+    "fleet": fleet.run,
     "planner_speed": planner_speed.run,
     "roofline": roofline_report.run,
     "kernels": kernels_bench.run,

@@ -5,20 +5,24 @@ Allocator) plus online admission policies and multi-server placements,
 a string-keyed registry per component kind, the ``Provisioner`` facade
 whose ``run`` is the one-call static pipeline, its event-driven sibling
 ``OnlineProvisioner`` (arrivals over time + on-arrival replanning,
-docs/SCENARIOS.md), and ``MultiServerProvisioner`` (placement x
-per-cell provisioning over M edge servers).
+docs/SCENARIOS.md), ``MultiServerProvisioner`` (placement x
+per-cell provisioning over M edge servers), and ``FleetProvisioner``
+(population-scale fleets with named arrival processes,
+docs/SCENARIOS.md "Fleet-scale simulation").
 """
 
 from repro.api.protocols import (Allocator, OffsetScheduler, Scheduler,
                                  Workload, WorkloadOutput)
-from repro.api.registry import (ADMISSIONS, ALLOCATORS, PLACEMENTS,
-                                SCHEDULERS, WORKLOADS, get_admission,
-                                get_allocator, get_placement,
+from repro.api.registry import (ADMISSIONS, ALLOCATORS, ARRIVALS,
+                                PLACEMENTS, SCHEDULERS, WORKLOADS,
+                                get_admission, get_allocator,
+                                get_arrival, get_placement,
                                 get_scheduler, get_workload,
                                 list_admissions, list_allocators,
-                                list_placements, list_schedulers,
-                                list_workloads, register_admission,
-                                register_allocator, register_placement,
+                                list_arrivals, list_placements,
+                                list_schedulers, list_workloads,
+                                register_admission, register_allocator,
+                                register_arrival, register_placement,
                                 register_scheduler, register_workload)
 # entry modules populate the registries on import
 from repro.api import allocators as _allocators   # noqa: F401
@@ -26,25 +30,30 @@ from repro.api import schedulers as _schedulers   # noqa: F401
 from repro.api import workloads as _workloads     # noqa: F401
 from repro.api import online as _online           # noqa: F401
 from repro.api import placements as _placements   # noqa: F401
+from repro.api import fleet as _fleet             # noqa: F401
 from repro.api.workloads import DecodeWorkload, DiffusionWorkload
 from repro.api.provisioner import Provisioner, ProvisionReport
 from repro.api.online import OnlineProvisioner, OnlineReport
 from repro.api.multiserver import (MultiOnlineReport,
                                    MultiProvisionReport,
                                    MultiServerProvisioner)
+from repro.api.fleet import (FleetProvisioner, FleetReport,
+                             make_fleet_scenario)
 
 __all__ = [
     "Allocator", "OffsetScheduler", "Scheduler", "Workload",
     "WorkloadOutput",
-    "ADMISSIONS", "ALLOCATORS", "PLACEMENTS", "SCHEDULERS", "WORKLOADS",
-    "register_admission", "register_allocator", "register_placement",
-    "register_scheduler", "register_workload",
-    "get_admission", "get_allocator", "get_placement", "get_scheduler",
-    "get_workload",
-    "list_admissions", "list_allocators", "list_placements",
-    "list_schedulers", "list_workloads",
+    "ADMISSIONS", "ALLOCATORS", "ARRIVALS", "PLACEMENTS", "SCHEDULERS",
+    "WORKLOADS",
+    "register_admission", "register_allocator", "register_arrival",
+    "register_placement", "register_scheduler", "register_workload",
+    "get_admission", "get_allocator", "get_arrival", "get_placement",
+    "get_scheduler", "get_workload",
+    "list_admissions", "list_allocators", "list_arrivals",
+    "list_placements", "list_schedulers", "list_workloads",
     "DecodeWorkload", "DiffusionWorkload",
     "Provisioner", "ProvisionReport",
     "OnlineProvisioner", "OnlineReport",
     "MultiServerProvisioner", "MultiProvisionReport", "MultiOnlineReport",
+    "FleetProvisioner", "FleetReport", "make_fleet_scenario",
 ]

@@ -1,9 +1,10 @@
 """String-keyed registries behind the provisioner API.
 
-Five registries — schedulers (P2 solvers), allocators (P1 solvers),
-workloads (step executors), admissions (online accept/reject policies)
-and placements (multi-server assignment strategies) — so every pipeline
-component is addressable by name
+Six registries — schedulers (P2 solvers), allocators (P1 solvers),
+workloads (step executors), admissions (online accept/reject policies),
+placements (multi-server assignment strategies) and arrivals (traffic
+processes for fleet simulation) — so every pipeline component is
+addressable by name
 (``Provisioner(scn, scheduler="stacking", allocator="pso")``,
 ``OnlineProvisioner(scn, admission="deadline_feasible")``,
 ``MultiServerProvisioner(scn, placement="greedy_fid")``) and new
@@ -69,6 +70,7 @@ ALLOCATORS = Registry("allocator")
 WORKLOADS = Registry("workload")
 ADMISSIONS = Registry("admission")
 PLACEMENTS = Registry("placement")
+ARRIVALS = Registry("arrival process")
 
 
 def register_scheduler(name: str, obj: Any = None, **kw):
@@ -91,6 +93,10 @@ def register_placement(name: str, obj: Any = None, **kw):
     return PLACEMENTS.register(name, obj, **kw)
 
 
+def register_arrival(name: str, obj: Any = None, **kw):
+    return ARRIVALS.register(name, obj, **kw)
+
+
 def get_scheduler(name: str) -> Callable:
     return SCHEDULERS.get(name)
 
@@ -111,6 +117,10 @@ def get_placement(name: str) -> Callable:
     return PLACEMENTS.get(name)
 
 
+def get_arrival(name: str) -> Callable:
+    return ARRIVALS.get(name)
+
+
 def list_schedulers() -> List[str]:
     return SCHEDULERS.names()
 
@@ -129,3 +139,7 @@ def list_admissions() -> List[str]:
 
 def list_placements() -> List[str]:
     return PLACEMENTS.names()
+
+
+def list_arrivals() -> List[str]:
+    return ARRIVALS.names()

@@ -39,9 +39,12 @@ import jax as _jax  # noqa: F401 — fail fast (ImportError) when absent
 from repro.core import arrays as _arrays
 from repro.core.jaxplan import backend, batched, kernels, optimal, sharded
 from repro.core.jaxplan.backend import equal_steps, offset_plan, stacking
-from repro.core.jaxplan.batched import PlanManyResult, plan_many
+from repro.core.jaxplan.batched import (PlanManyResult, plan_many,
+                                        replan_many)
 from repro.core.jaxplan.optimal import optimal_mean_fid, optimal_plan
-from repro.core.jaxplan.sharded import plan_many_sharded, resolve_devices
+from repro.core.jaxplan.sharded import (plan_many_sharded,
+                                        replan_many_sharded,
+                                        resolve_devices)
 
 #: what ``arrays.engine_impl("jax")`` hands to the dispatch sites
 IMPL = types.SimpleNamespace(
@@ -53,6 +56,8 @@ IMPL = types.SimpleNamespace(
     optimal_mean_fid=optimal_mean_fid,
     plan_many=plan_many,
     plan_many_sharded=plan_many_sharded,
+    replan_many=replan_many,
+    replan_many_sharded=replan_many_sharded,
 )
 
 _arrays.register_engine("jax", IMPL)
@@ -70,6 +75,8 @@ __all__ = [
     "optimal_plan",
     "plan_many",
     "plan_many_sharded",
+    "replan_many",
+    "replan_many_sharded",
     "resolve_devices",
     "sharded",
     "stacking",

@@ -141,3 +141,84 @@ def plan_many(tau_prime: np.ndarray, *, delay: DelayModel,
         mean_fid=np.asarray(best_q)[:S],
         makespan=np.asarray(ms)[:S],
     )
+
+
+def _replan_prep(taup0: np.ndarray, soff: np.ndarray, vd: np.ndarray,
+                 dm: np.ndarray, delay: DelayModel, t_star_max: int,
+                 Sp: int):
+    """Host-side inputs of the replan block: ``_pad_stack`` with the
+    pass offsets zeroed (the shared-horizon residual pass), the score
+    offsets / doomed mask padded alongside, and the per-scenario
+    level-validity mask capping each row's candidate grid at its own
+    t_star_max — the grid the per-cell ``stacking_vec`` search sweeps,
+    so winner selection sees the same candidate set."""
+    S, K = taup0.shape
+    step = delay.a + delay.b
+    loosest = taup0.max(axis=-1, initial=0.0)
+    caps = np.maximum(1, np.where(loosest > 0, loosest / step,
+                                  0.0).astype(np.int64))
+    if t_star_max > 0:
+        caps = np.minimum(caps, t_star_max)
+    taup_p, _, vd_p, tie, f_thr, lv_p, shift, kb = _pad_stack(
+        taup0, np.zeros_like(soff), vd, delay,
+        int(caps.max(initial=1)), Sp)
+    Kp = taup_p.shape[1]
+    soff_p = np.zeros((Sp, Kp), dtype=np.int64)
+    soff_p[:S, :K] = soff
+    dm_p = np.zeros((Sp, Kp), dtype=bool)
+    dm_p[:S, :K] = dm
+    caps_p = np.ones(Sp, dtype=np.int64)
+    caps_p[:S] = caps
+    lv_ok = lv_p[None, :] <= caps_p[:, None]
+    return taup_p, soff_p, vd_p, dm_p, tie, f_thr, lv_p, lv_ok, shift, kb
+
+
+def replan_many(tau_prime: np.ndarray, *, delay: DelayModel,
+                quality: PowerLawFID,
+                offsets: Optional[np.ndarray] = None,
+                doomed: Optional[np.ndarray] = None,
+                valid: Optional[np.ndarray] = None,
+                t_star_max: int = 0,
+                devices=None) -> PlanManyResult:
+    """Batched *residual* replans: S concurrent shared-horizon replans
+    (the ``repro.core.online`` semantics) in one jitted call.
+
+    Differs from ``plan_many`` in exactly the ways a mid-flight replan
+    differs from a fresh plan: the clustered pass runs with ZERO
+    offsets over the residual budgets (``offsets`` never join the
+    candidate family), candidates are scored progress-aware as
+    ``fid(offsets + counts)`` with ``doomed`` services pinned at
+    ``fid(0)`` (the ``online._OffsetQuality`` objective; pass
+    ``doomed[s, k] = offsets[s, k] > 0 and tau_prime[s, k] < 0``), and
+    each scenario's candidate grid is capped at its own t_star_max so
+    winner selection matches the per-cell search row for row.  With
+    all-zero offsets this is ``plan_many`` plus the per-scenario grid
+    cap.  ``devices`` shards the scenario axis exactly like
+    ``plan_many(devices=...)``.
+    """
+    if devices is not None:
+        from repro.core.jaxplan import sharded
+        return sharded.replan_many_sharded(
+            tau_prime, delay=delay, quality=quality, offsets=offsets,
+            doomed=doomed, valid=valid, t_star_max=t_star_max,
+            devices=devices)
+    taup0, soff, vd, S, K = _check_inputs(tau_prime, quality, offsets,
+                                          valid)
+    dm = np.zeros((S, K), dtype=bool) if doomed is None \
+        else np.broadcast_to(np.asarray(doomed, dtype=bool),
+                             (S, K)).copy()
+    (taup_p, soff_p, vd_p, dm_p, tie, f_thr, lv_p, lv_ok, shift,
+     kb) = _replan_prep(taup0, soff, vd, dm, delay, t_star_max,
+                        kernels._bucket(S))
+    with kernels.enable_x64():
+        best_i, counts, best_q, ms = kernels._replan_many_core(
+            taup_p, soff_p, vd_p, dm_p, tie, f_thr, lv_p, lv_ok, shift,
+            delay.a, delay.b, quality.alpha, quality.beta,
+            quality.gamma, quality.fid_at_zero, kb)
+    best_i = np.asarray(best_i)[:S]
+    return PlanManyResult(
+        best_level=lv_p[np.maximum(best_i, 0)].astype(np.int64),
+        steps=np.asarray(counts)[:S, :K],
+        mean_fid=np.asarray(best_q)[:S],
+        makespan=np.asarray(ms)[:S],
+    )

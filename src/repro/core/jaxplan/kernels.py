@@ -496,3 +496,36 @@ def _plan_many_block(taup0, off, valid, tie, f_thr, levels, shift,
 
 
 _plan_many_core = jax.jit(_plan_many_block, static_argnums=(13,))
+
+
+# The REPLAN variant of the fused search — the online event loop's
+# shared-horizon semantics, batched over concurrent replans.
+# ``_plan_many_block`` folds the offsets into the clustered pass itself
+# (the offset-native candidate family of ``stacking_offset``); a
+# residual replan in ``repro.core.online`` instead reruns Algorithm 1
+# with ZERO offsets over the residual budgets and only *scores*
+# candidates progress-aware — ``fid(done + new)`` with the
+# ``doomed -> fid(0)`` rule (``online._OffsetQuality``) — and each
+# scenario's candidate grid stops at its own t_star_max (``lv_ok``),
+# exactly the level set the per-cell ``stacking_vec`` search sweeps.
+# The fleet harness (repro.core.fleet) batches every concurrent cell
+# replan of a tick through this block in one jitted call.
+def _replan_many_block(taup0, score_off, valid, doomed, tie, f_thr,
+                       levels, lv_ok, shift, a, b, alpha, beta, gamma,
+                       fid0, key_bits):
+    pass_off = jnp.zeros(taup0.shape, dtype=score_off.dtype)
+    Tc, t = jax.vmap(
+        _clustered_core,
+        in_axes=(0, 0, None, 0, 0, None, None, None, None))(
+            taup0, pass_off, levels, tie, f_thr, shift, a, b, key_bits)
+    qs = jax.vmap(_powerlaw_rows,
+                  in_axes=(0, 0, 0, 0, None, None, None, None))(
+        Tc, score_off, valid, doomed, alpha, beta, gamma, fid0)
+    best_i, best_q = jax.vmap(_first_best)(qs, lv_ok)
+    idx = jnp.maximum(best_i, 0)
+    counts = jnp.take_along_axis(Tc, idx[:, None, None], axis=1)[:, 0, :]
+    ms = jnp.take_along_axis(t, idx[:, None], axis=1)[:, 0]
+    return best_i, counts, best_q, ms
+
+
+_replan_many_core = jax.jit(_replan_many_block, static_argnums=(15,))

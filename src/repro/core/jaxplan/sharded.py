@@ -43,7 +43,7 @@ import jax
 from repro.core.delay_model import DelayModel
 from repro.core.jaxplan import kernels
 from repro.core.jaxplan.batched import (PlanManyResult, _check_inputs,
-                                        _pad_stack)
+                                        _pad_stack, _replan_prep)
 from repro.core.quality_model import PowerLawFID
 
 try:
@@ -107,6 +107,29 @@ def _sharded_fn(devs: tuple, key_bits: int, backend: str):
     return fn, "pmap"
 
 
+@lru_cache(maxsize=None)
+def _sharded_replan_fn(devs: tuple, key_bits: int, backend: str):
+    """The compiled sharded REPLAN search (``_replan_many_block``) for
+    one device set: same split as ``_sharded_fn`` plus the two extra
+    per-row inputs (doomed mask, per-scenario level validity)."""
+    block = partial(kernels._replan_many_block, key_bits=key_bits)
+    if backend == "shard_map" and shard_map is not None:
+        mesh = Mesh(np.array(devs), ("s",))
+        sharded = P("s")
+        fn = shard_map(
+            block, mesh=mesh,
+            in_specs=(sharded, sharded, sharded, sharded, sharded,
+                      sharded, P(None), sharded, P(), P(), P(), P(),
+                      P(), P(), P()),
+            out_specs=(sharded, sharded, sharded, sharded),
+            check_rep=False)
+        return jax.jit(fn), "shard_map"
+    fn = jax.pmap(block, devices=devs,
+                  in_axes=(0, 0, 0, 0, 0, 0, None, 0, None, None,
+                           None, None, None, None, None))
+    return fn, "pmap"
+
+
 def plan_many_sharded(tau_prime: np.ndarray, *, delay: DelayModel,
                       quality: PowerLawFID,
                       offsets: Optional[np.ndarray] = None,
@@ -139,6 +162,54 @@ def plan_many_sharded(tau_prime: np.ndarray, *, delay: DelayModel,
         best_i, counts, best_q, ms = fn(
             *args, lv_p, shift, delay.a, delay.b, quality.alpha,
             quality.beta, quality.gamma, quality.fid_at_zero)
+    best_i, counts = np.asarray(best_i), np.asarray(counts)
+    best_q, ms = np.asarray(best_q), np.asarray(ms)
+    if backend == "pmap":                 # collapse the device axis
+        best_i = best_i.reshape(-1)
+        counts = counts.reshape((-1,) + counts.shape[2:])
+        best_q, ms = best_q.reshape(-1), ms.reshape(-1)
+    best_i = best_i[:S]
+    return PlanManyResult(
+        best_level=lv_p[np.maximum(best_i, 0)].astype(np.int64),
+        steps=counts[:S, :K],
+        mean_fid=best_q[:S],
+        makespan=ms[:S],
+    )
+
+
+def replan_many_sharded(tau_prime: np.ndarray, *, delay: DelayModel,
+                        quality: PowerLawFID,
+                        offsets: Optional[np.ndarray] = None,
+                        doomed: Optional[np.ndarray] = None,
+                        valid: Optional[np.ndarray] = None,
+                        t_star_max: int = 0,
+                        devices: Devices = None) -> PlanManyResult:
+    """``replan_many`` with the scenario axis sharded across devices —
+    the shared-horizon residual-replan semantics of ``plan_many_sharded``
+    (see ``repro.core.jaxplan.batched.replan_many`` for the contract)."""
+    devs = resolve_devices(devices)
+    D = len(devs)
+    taup0, soff, vd, S, K = _check_inputs(tau_prime, quality, offsets,
+                                          valid)
+    dm = np.zeros((S, K), dtype=bool) if doomed is None \
+        else np.broadcast_to(np.asarray(doomed, dtype=bool),
+                             (S, K)).copy()
+    rows = kernels._bucket(max(1, -(-S // D)))
+    (taup_p, soff_p, vd_p, dm_p, tie, f_thr, lv_p, lv_ok, shift,
+     kb) = _replan_prep(taup0, soff, vd, dm, delay, t_star_max,
+                        D * rows)
+
+    fn, backend = _sharded_replan_fn(tuple(devs), kb, _BACKEND)
+    args = (taup_p, soff_p, vd_p, dm_p, tie, f_thr)
+    lv_ok_arg = lv_ok
+    if backend == "pmap":                 # explicit leading device axis
+        args = tuple(a.reshape((D, rows) + a.shape[1:]) for a in args)
+        lv_ok_arg = lv_ok.reshape((D, rows) + lv_ok.shape[1:])
+    with kernels.enable_x64():
+        best_i, counts, best_q, ms = fn(
+            *args, lv_p, lv_ok_arg, shift, delay.a, delay.b,
+            quality.alpha, quality.beta, quality.gamma,
+            quality.fid_at_zero)
     best_i, counts = np.asarray(best_i), np.asarray(counts)
     best_q, ms = np.asarray(best_q), np.asarray(ms)
     if backend == "pmap":                 # collapse the device axis

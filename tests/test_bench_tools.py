@@ -132,7 +132,7 @@ class TestCompareGate:
 
     def test_committed_baseline_gates_known_suites(self):
         """The repo baseline must only gate metrics the CI bench job
-        actually produces (api, online, multiserver, churn,
+        actually produces (api, online, multiserver, churn, fleet,
         planner_speed suites)."""
         baseline = json.loads(
             (ROOT / "benchmarks" / "baseline.json").read_text())
@@ -140,11 +140,27 @@ class TestCompareGate:
         for name, spec in baseline["metrics"].items():
             assert name.split("_")[0] in ("online", "multiserver",
                                           "api", "churn", "offset",
-                                          "planner")
+                                          "planner", "fleet")
             assert spec["kind"] in ("flag", "lower_is_better")
         # every required suite is one the CI bench job runs (ci.yml)
         assert set(baseline["required_suites"]) == \
-            {"api", "online", "multiserver", "churn", "planner_speed"}
+            {"api", "online", "multiserver", "churn", "fleet",
+             "planner_speed"}
+
+    def test_fleet_flags_are_gated(self):
+        """ISSUE 8 acceptance: the bench gate must pin the fleet
+        population/memory/equivalence claims at 1."""
+        baseline = json.loads(
+            (ROOT / "benchmarks" / "baseline.json").read_text())
+        m = baseline["metrics"]
+        for flag in ("fleet_matches_multiserver",
+                     "fleet_1m_services_ok", "fleet_bounded_memory"):
+            assert m[flag] == {"value": 1.0, "kind": "flag"}
+        # jax-vs-vec parity is gated at the documented 1e-9 tolerance
+        parity = m["fleet_jax_vs_vec_fid_diff"]
+        assert parity["kind"] == "lower_is_better"
+        assert parity["tolerance"] == 0.0
+        assert parity["abs_tol"] == 1e-9
 
     def test_planner_speed_flags_are_gated(self):
         """ISSUE 5 acceptance: the bench gate must pin the >=5x
@@ -166,6 +182,128 @@ class TestCompareGate:
         assert m["offset_beats_shared_under_churn"] == \
             {"value": 1.0, "kind": "flag"}
         assert m["churn_handoff_sane"] == {"value": 1.0, "kind": "flag"}
+
+
+class TestToleranceOverride:
+    """Per-row ``tolerance`` key: overrides the 5% default (and any
+    ``rel_tol``), survives ``--update``."""
+
+    def test_tolerance_overrides_default(self):
+        base = {"metrics": {"online_x": {
+            "value": 10.0, "kind": "lower_is_better",
+            "tolerance": 0.5}}}
+        # 40% worse: fails the 5% default, passes the 50% override
+        assert compare.compare(base, {"online_x": 14.0}) == []
+
+    def test_zero_tolerance_is_tight(self):
+        base = {"metrics": {"online_x": {
+            "value": 10.0, "kind": "lower_is_better",
+            "tolerance": 0.0}}}
+        assert compare.compare(base, {"online_x": 10.2})
+        assert compare.compare(base, {"online_x": 10.0}) == []
+
+    def test_tolerance_wins_over_rel_tol(self):
+        base = {"metrics": {"online_x": {
+            "value": 10.0, "kind": "lower_is_better",
+            "rel_tol": 0.5, "tolerance": 0.01}}}
+        assert compare.compare(base, {"online_x": 10.5})
+
+    def test_gate_limit_default(self):
+        rel, abs_tol, limit = compare.gate_limit(
+            {"value": 10.0, "kind": "lower_is_better"})
+        assert rel == compare.DEFAULT_REL_TOL
+        assert limit == pytest.approx(10.5, abs=1e-6)
+
+    def test_update_roundtrips_tolerance(self, tmp_path):
+        base = {"metrics": {
+            "online_r0.5_stacking": {"value": 6.0,
+                                     "kind": "lower_is_better",
+                                     "tolerance": 0.01,
+                                     "abs_tol": 1e-6},
+            "online_stacking_best": {"value": 1.0, "kind": "flag"},
+        }}
+        base_path = tmp_path / "baseline.json"
+        base_path.write_text(json.dumps(base))
+        p = _bench_file(tmp_path, "online",
+                        [("online_r0.5_stacking", 5.5, ""),
+                         ("online_stacking_best", 1.0, "")])
+        assert compare.main([str(p), "--baseline", str(base_path),
+                             "--update"]) == 0
+        refreshed = json.loads(base_path.read_text())
+        m = refreshed["metrics"]["online_r0.5_stacking"]
+        assert m == {"value": 5.5, "kind": "lower_is_better",
+                     "tolerance": 0.01, "abs_tol": 1e-6}
+
+
+class TestGithubSummary:
+    """--github-summary markdown rendering + the $GITHUB_STEP_SUMMARY
+    append path."""
+
+    BASE = {"metrics": {
+        "online_r0.5_stacking": {"value": 6.0, "kind": "lower_is_better",
+                                 "tolerance": 0.1},
+        "online_stacking_best": {"value": 1.0, "kind": "flag"},
+        "churn_handoff_sane": {"value": 1.0, "kind": "flag"},
+    }}
+
+    def test_all_pass_renders_green(self):
+        md = compare.github_summary(
+            self.BASE, {"online_r0.5_stacking": 6.2,
+                        "online_stacking_best": 1.0,
+                        "churn_handoff_sane": 1.0}, [])
+        assert "**PASSED**" in md
+        assert "❌" not in md
+        assert md.count("✅") == 3
+        # one table row per gated metric, with its gate limit
+        assert "| `online_r0.5_stacking` | lower_is_better | 6.0000 " \
+            "| 6.2000 | <= 6.6000 | ✅ |" in md
+
+    def test_failures_render_red(self):
+        md = compare.github_summary(
+            self.BASE, {"online_r0.5_stacking": 9.0,
+                        "online_stacking_best": 0.0}, [])
+        assert "**FAILED**" in md
+        # regressed metric, dropped flag, missing flag
+        assert md.count("❌") == 3
+        assert "_missing_" in md
+
+    def test_suite_findings_listed(self):
+        md = compare.github_summary(
+            self.BASE, {"online_r0.5_stacking": 6.0,
+                        "online_stacking_best": 1.0,
+                        "churn_handoff_sane": 1.0},
+            ["required suite 'fleet' has no BENCH_*.json among the "
+             "measured files"])
+        assert "**FAILED**" in md
+        assert "⚠️" in md and "'fleet'" in md
+
+    def test_main_appends_to_step_summary(self, tmp_path, monkeypatch):
+        base_path = tmp_path / "baseline.json"
+        base_path.write_text(json.dumps(BASELINE))
+        p = _bench_file(tmp_path, "online",
+                        [("online_r0.5_stacking", 6.0, ""),
+                         ("online_stacking_best", 1.0, "")])
+        summary = tmp_path / "summary.md"
+        summary.write_text("prior content\n")
+        monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(summary))
+        assert compare.main([str(p), "--baseline", str(base_path),
+                             "--github-summary"]) == 0
+        text = summary.read_text()
+        assert text.startswith("prior content\n")   # appended, not clobbered
+        assert "### Benchmark regression gate" in text
+        assert "**PASSED**" in text
+
+    def test_main_without_env_prints(self, tmp_path, monkeypatch,
+                                     capsys):
+        base_path = tmp_path / "baseline.json"
+        base_path.write_text(json.dumps(BASELINE))
+        p = _bench_file(tmp_path, "online",
+                        [("online_r0.5_stacking", 6.0, ""),
+                         ("online_stacking_best", 1.0, "")])
+        monkeypatch.delenv("GITHUB_STEP_SUMMARY", raising=False)
+        assert compare.main([str(p), "--baseline", str(base_path),
+                             "--github-summary"]) == 0
+        assert "### Benchmark regression gate" in capsys.readouterr().out
 
 
 class TestRequiredSuites:

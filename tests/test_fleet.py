@@ -1,0 +1,328 @@
+"""repro.core.fleet (ISSUE 8 tentpole): the population-scale harness.
+
+The contract under test, in order of importance:
+
+* event-mode fleet == ``simulate_online_multi`` on the identical
+  workload within 1e-9 mean FID (the fleet harness is a
+  re-implementation for scale, not a new model);
+* the jax batched-replan path == the vec per-cell loop within 1e-9;
+* event and epoch modes agree exactly on trace-driven workloads
+  (chunk-independent sampling);
+* memory is bounded by the working set, never the horizon;
+* seeded runs are deterministic; admission/capacity account for every
+  arrival; the api facade resolves everything by name.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import fleet as fl
+from repro.core import traffic
+from repro.core.bandwidth import equal_allocate, inv_se_allocate
+from repro.core.multiserver import simulate_online_multi
+from repro.core.stacking import stacking
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+def small_fleet(n_cells=3, rate=2.0, horizon=8.0, seed=11, **kw):
+    cells = [fl.FleetCell(bandwidth_hz=1.2e6 * (c + 1),
+                          speed=1.0 + 0.25 * c,
+                          process=traffic.PoissonProcess(rate))
+             for c in range(n_cells)]
+    return fl.FleetScenario(cells=cells, horizon=horizon, seed=seed,
+                            **kw)
+
+
+CORE_ALLOC = {"equal": lambda scn, *a, **k: equal_allocate(scn),
+              "inv_se": lambda scn, *a, **k: inv_se_allocate(scn)}
+
+
+class TestMultiserverEquivalence:
+    """Acceptance: mean FID within 1e-9 of ``simulate_online_multi``
+    with the placement pinned to the fleet's per-cell assignment."""
+
+    @pytest.mark.parametrize("alloc", ["equal", "inv_se"])
+    @pytest.mark.parametrize("engine", ["vec", "jax"])
+    def test_event_mode_matches(self, alloc, engine):
+        if engine == "jax":
+            pytest.importorskip("jax")
+        fleet = small_fleet()
+        res = fl.simulate_fleet(fleet, allocator=alloc, mode="event",
+                                engine=engine)
+        scn, assignment = fl.fleet_to_scenario(fleet)
+        assert len(scn.services) > 30    # non-trivial workload
+        cell_of = {s.id: assignment[i]
+                   for i, s in enumerate(scn.services)}
+        ref = simulate_online_multi(
+            scn, stacking, CORE_ALLOC[alloc],
+            placement=lambda svc, sim: cell_of[svc.id], engine="vec")
+        assert res.mean_fid == pytest.approx(ref.mean_fid, abs=1e-9)
+        assert res.outage_rate == pytest.approx(ref.outage_rate,
+                                                abs=1e-12)
+        assert res.admitted == len(ref.outcomes)
+
+    def test_fleet_to_scenario_id_order(self):
+        """Global ids in (arrival, cell) order — per-cell ids ascend
+        with arrival time, the tie-break invariant both simulators
+        share."""
+        scn, assignment = fl.fleet_to_scenario(small_fleet())
+        arrivals = [s.arrival for s in scn.services]
+        keys = list(zip(arrivals, assignment))
+        assert keys == sorted(keys)
+        assert [s.id for s in scn.services] == \
+            list(range(len(scn.services)))
+
+
+class TestEngineParity:
+    def test_epoch_jax_matches_vec(self):
+        pytest.importorskip("jax")
+        cells = [fl.FleetCell(bandwidth_hz=2e6,
+                              process=traffic.PoissonProcess(5.0))
+                 for _ in range(10)]
+        fleet = fl.FleetScenario(cells=cells, horizon=30.0, seed=1)
+        vec = fl.simulate_fleet(fleet, mode="epoch", engine="vec")
+        jax_ = fl.simulate_fleet(fleet, mode="epoch", engine="jax")
+        assert jax_.mean_fid == pytest.approx(vec.mean_fid, abs=1e-9)
+        assert jax_.completed == vec.completed
+        assert jax_.outage_rate == pytest.approx(vec.outage_rate,
+                                                 abs=1e-12)
+        # the whole point of the batched path: far fewer planner calls
+        # than per-cell replans
+        assert jax_.planner_calls < vec.planner_calls
+        assert jax_.replans == vec.replans
+
+    def test_event_jax_batches_rounds(self):
+        pytest.importorskip("jax")
+        fleet = small_fleet(n_cells=4, rate=3.0, horizon=6.0)
+        vec = fl.simulate_fleet(fleet, mode="event", engine="vec")
+        jax_ = fl.simulate_fleet(fleet, mode="event", engine="jax")
+        assert jax_.mean_fid == pytest.approx(vec.mean_fid, abs=1e-9)
+        assert jax_.planner_calls <= vec.planner_calls
+
+
+class TestCrossMode:
+    def test_trace_event_equals_epoch(self):
+        """Trace-driven workloads sample chunk-independently, so the
+        two modes see identical services; with arrivals spaced wider
+        than the drain time the plans coincide too — exact agreement."""
+        times = [0.0, 5.0, 10.0, 15.0]
+        cells = [fl.FleetCell(
+            bandwidth_hz=2e6,
+            process=traffic.TraceArrivals([t + 0.3 * c for t in times]))
+            for c in range(2)]
+        fleet = fl.FleetScenario(cells=cells, horizon=20.0, seed=3,
+                                 deadline_range=(1.0, 2.0))
+        ev = fl.simulate_fleet(fleet, mode="event")
+        ep = fl.simulate_fleet(fleet, mode="epoch", epoch=5.0)
+        assert ev.mean_fid == pytest.approx(ep.mean_fid, abs=1e-12)
+        assert (ev.arrivals, ev.completed) == (ep.arrivals, ep.completed)
+        assert ev.outage_rate == pytest.approx(ep.outage_rate,
+                                               abs=1e-12)
+
+    def test_epoch_chunking_invariant(self):
+        """Halving the epoch width must not change which services a
+        trace-driven fleet sees (attribute substreams are
+        chunk-independent)."""
+        tr = traffic.TraceArrivals(np.linspace(0.5, 39.5, 40))
+        fleet = fl.FleetScenario(
+            cells=[fl.FleetCell(bandwidth_hz=3e6, process=tr)],
+            horizon=40.0, seed=9)
+        a = fl.simulate_fleet(fleet, mode="epoch", epoch=10.0)
+        b = fl.simulate_fleet(fleet, mode="epoch", epoch=5.0)
+        assert a.arrivals == b.arrivals == 40
+
+
+class TestDeterminismAndAccounting:
+    def test_seeded_run_is_reproducible(self):
+        a = fl.simulate_fleet(small_fleet(seed=5))
+        b = fl.simulate_fleet(small_fleet(seed=5))
+        assert a == b
+
+    def test_different_seed_differs(self):
+        a = fl.simulate_fleet(small_fleet(seed=5))
+        b = fl.simulate_fleet(small_fleet(seed=6))
+        assert a.mean_fid != b.mean_fid
+
+    @pytest.mark.parametrize("mode", ["event", "epoch"])
+    def test_every_arrival_accounted(self, mode):
+        res = fl.simulate_fleet(small_fleet(), mode=mode)
+        assert res.arrivals > 0
+        assert res.admitted + res.rejected == res.arrivals
+        assert res.completed == res.admitted
+
+    def test_capacity_rejects(self):
+        cells = [fl.FleetCell(bandwidth_hz=2e6, capacity=3,
+                              process=traffic.PoissonProcess(3.0))]
+        fleet = fl.FleetScenario(cells=cells, horizon=10.0, seed=0)
+        for mode in ("event", "epoch"):
+            res = fl.simulate_fleet(fleet, mode=mode)
+            assert res.admitted <= 3
+            assert res.rejected == res.arrivals - res.admitted
+            assert res.rejected > 0
+
+    def test_admission_policy_applies(self):
+        fleet = small_fleet()
+        deny = fl.simulate_fleet(fleet, admission=lambda c, p: False)
+        assert deny.rejected == deny.arrivals
+        assert deny.completed == deny.admitted == 0
+        feasible = fl.simulate_fleet(
+            fleet, admission=lambda c, p: p.steps > 0 and p.met_deadline)
+        assert feasible.outage_rate <= \
+            fl.simulate_fleet(fleet).outage_rate + 1e-12
+        assert feasible.rejected > 0
+
+
+class TestBoundedMemory:
+    def test_peak_rows_track_working_set_not_horizon(self):
+        peaks = {}
+        for horizon in (25.0, 100.0):
+            cells = [fl.FleetCell(bandwidth_hz=1.5e6,
+                                  process=traffic.PoissonProcess(2.0))
+                     for _ in range(8)]
+            fleet = fl.FleetScenario(cells=cells, horizon=horizon,
+                                     seed=7)
+            res = fl.simulate_fleet(fleet, mode="epoch", epoch=5.0)
+            peaks[horizon] = res.peak_live_rows
+        assert peaks[100.0] <= 2 * peaks[25.0]
+
+    def test_reservoir_is_fixed_size(self):
+        r = fl.ReservoirQuantiles(capacity=64, seed=0)
+        rng = np.random.default_rng(0)
+        for x in rng.random(10_000):
+            r.add(float(x))
+        assert r.count == 10_000
+        assert r._buf.size == 64
+        # a uniform stream's median lands near 0.5 even from a
+        # 64-sample reservoir
+        assert r.percentile(50) == pytest.approx(0.5, abs=0.2)
+
+    def test_reservoir_small_stream_exact(self):
+        r = fl.ReservoirQuantiles(capacity=64, seed=0)
+        for x in [1.0, 2.0, 3.0]:
+            r.add(x)
+        assert r.percentile(50) == 2.0
+        assert np.isnan(fl.ReservoirQuantiles().percentile(50))
+
+
+class TestSharedStreamPlacement:
+    def test_shared_stream_routes(self):
+        shared = traffic.PoissonProcess(4.0)
+        cells = [fl.FleetCell(bandwidth_hz=2e6) for _ in range(3)]
+        fleet = fl.FleetScenario(cells=cells, horizon=20.0, seed=2,
+                                 shared_process=shared)
+        for placement in ("round_robin", "least_busy", "rate_aware"):
+            res = fl.simulate_fleet(fleet, mode="epoch",
+                                    placement=placement)
+            assert res.arrivals > 0
+            assert res.admitted + res.rejected == res.arrivals
+
+    def test_event_mode_rejects_shared(self):
+        fleet = fl.FleetScenario(
+            cells=[fl.FleetCell(bandwidth_hz=1e6)], horizon=5.0,
+            shared_process=traffic.PoissonProcess(1.0))
+        with pytest.raises(ValueError, match="event"):
+            fl.simulate_fleet(fleet, mode="event")
+
+
+class TestValidation:
+    def test_bad_mode(self):
+        with pytest.raises(ValueError, match="mode"):
+            fl.simulate_fleet(small_fleet(), mode="turbo")
+
+    def test_bad_epoch(self):
+        with pytest.raises(ValueError, match="epoch"):
+            fl.simulate_fleet(small_fleet(), mode="epoch", epoch=0.0)
+
+    def test_iterative_allocators_rejected(self):
+        with pytest.raises(ValueError, match="closed-form"):
+            fl.simulate_fleet(small_fleet(), allocator="pso")
+
+    def test_scenario_validation(self):
+        with pytest.raises(ValueError, match="at least one cell"):
+            fl.FleetScenario(cells=[], horizon=1.0)
+        with pytest.raises(ValueError, match="horizon"):
+            fl.FleetScenario(cells=[fl.FleetCell(1e6)], horizon=0.0)
+        with pytest.raises(ValueError, match="deadline_range"):
+            fl.FleetScenario(cells=[fl.FleetCell(1e6)], horizon=1.0,
+                             deadline_range=(3.0, 1.0))
+
+
+class TestApiFacade:
+    def test_make_fleet_scenario_and_run(self):
+        from repro.api import FleetProvisioner, make_fleet_scenario
+        fleet = make_fleet_scenario(
+            4, 20.0, rate=1.0, bandwidth_hz=[1e6, 2e6, 3e6, 4e6],
+            speed=1.2, seed=3)
+        assert fleet.n_cells == 4
+        assert fleet.cells[2].bandwidth_hz == 3e6
+        report = FleetProvisioner(fleet, allocator="inv_se").run()
+        assert report.result.arrivals > 0
+        assert "fleet x4" in report.summary()
+        assert "inv_se" in report.summary()
+
+    def test_arrivals_registry(self):
+        from repro.api import get_arrival, list_arrivals
+        names = list_arrivals()
+        for name in ("poisson", "diurnal", "flash_crowd", "trace"):
+            assert name in names
+        assert get_arrival("poisson") is traffic.PoissonProcess
+
+    def test_correlated_rates_spec(self):
+        from repro.api import make_fleet_scenario
+        fleet = make_fleet_scenario(8, 10.0, rate=2.0, correlation=0.7,
+                                    seed=4)
+        rates = [c.process.rate for c in fleet.cells]
+        assert len(set(rates)) > 1          # heterogeneous
+        assert min(rates) > 0
+        # reproducible from the seed
+        again = make_fleet_scenario(8, 10.0, rate=2.0, correlation=0.7,
+                                    seed=4)
+        assert [c.process.rate for c in again.cells] == rates
+
+    def test_trace_spec_loads_file(self, tmp_path):
+        from repro.api import make_fleet_scenario
+        p = tmp_path / "t.json"
+        p.write_text("[1.0, 2.0]")
+        fleet = make_fleet_scenario(
+            1, 5.0, arrival="trace", arrival_kwargs={"path": str(p)})
+        assert fleet.cells[0].process.times.tolist() == [1.0, 2.0]
+
+    def test_per_cell_mismatch_raises(self):
+        from repro.api import make_fleet_scenario
+        with pytest.raises(ValueError, match="bandwidth_hz"):
+            make_fleet_scenario(3, 5.0, rate=1.0,
+                                bandwidth_hz=[1e6, 2e6])
+
+    def test_kwargs_on_instance_raises(self):
+        from repro.api import make_fleet_scenario
+        with pytest.raises(ValueError, match="already constructed"):
+            make_fleet_scenario(1, 5.0,
+                                arrival=traffic.PoissonProcess(1.0),
+                                arrival_kwargs={"rate": 2.0})
+
+    def test_correlation_without_rate_raises(self):
+        from repro.api import make_fleet_scenario
+        with pytest.raises(ValueError, match="rate"):
+            make_fleet_scenario(2, 5.0, correlation=0.5)
+
+    def test_rate_sugar_binds_base_rate_factories(self):
+        # rate= must land on DiurnalPoisson's base_rate, not `rate`
+        from repro.api import make_fleet_scenario
+        fleet = make_fleet_scenario(
+            4, 20.0, arrival="diurnal", rate=2.0, correlation=0.6,
+            seed=3, arrival_kwargs={"amplitude": 0.6, "period": 10.0})
+        rates = [c.process.mean_rate(0.0, 10.0) for c in fleet.cells]
+        assert len(set(rates)) > 1 and min(rates) > 0
+
+    def test_rate_sugar_rejects_rateless_factory(self):
+        from repro.api import make_fleet_scenario
+        with pytest.raises(ValueError, match="neither rate"):
+            make_fleet_scenario(1, 5.0, arrival="trace_times", rate=1.0,
+                                arrival_kwargs={"times": [1.0]})
+
+    def test_rate_sugar_conflict_raises(self):
+        from repro.api import make_fleet_scenario
+        with pytest.raises(ValueError, match="conflicts"):
+            make_fleet_scenario(1, 5.0, rate=1.0,
+                                arrival_kwargs={"rate": 2.0})

@@ -1,0 +1,218 @@
+"""repro.core.traffic: arrival-process contract (sorted, in-window,
+seed-deterministic), inhomogeneous-Poisson empirical rates, trace
+loading with loud malformed-row errors (ISSUE 8 satellite)."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.traffic import (DiurnalPoisson, FlashCrowd,
+                                InhomogeneousPoisson, PoissonProcess,
+                                TraceArrivals, correlated_rates,
+                                load_trace)
+
+ALL_PROCESSES = [
+    PoissonProcess(2.0),
+    DiurnalPoisson(2.0, amplitude=0.8, period=10.0),
+    FlashCrowd(0.5, 4.0, start=3.0, duration=2.0),
+    InhomogeneousPoisson(lambda t: 1.0 + 0.5 * np.cos(np.asarray(t)),
+                         rate_max=1.5),
+    TraceArrivals([0.5, 1.5, 2.5, 9.9]),
+]
+
+
+@pytest.mark.parametrize("proc", ALL_PROCESSES,
+                         ids=lambda p: type(p).__name__)
+class TestSampleContract:
+    def test_sorted_float64_in_window(self, proc):
+        t = proc.sample(np.random.default_rng(0), 0.0, 10.0)
+        assert t.dtype == np.float64
+        assert np.all(np.diff(t) >= 0)
+        assert t.size == 0 or (t[0] >= 0.0 and t[-1] < 10.0)
+
+    def test_seed_determinism(self, proc):
+        a = proc.sample(np.random.default_rng(42), 0.0, 10.0)
+        b = proc.sample(np.random.default_rng(42), 0.0, 10.0)
+        np.testing.assert_array_equal(a, b)
+
+    def test_empty_window(self, proc):
+        assert proc.sample(np.random.default_rng(0), 3.0, 3.0).size == 0
+
+    def test_bad_window_raises(self, proc):
+        with pytest.raises(ValueError):
+            proc.sample(np.random.default_rng(0), 5.0, 4.0)
+        with pytest.raises(ValueError):
+            proc.mean_rate(0.0, float("inf"))
+
+
+class TestPoisson:
+    def test_rejects_bad_rate(self):
+        with pytest.raises(ValueError):
+            PoissonProcess(-1.0)
+        with pytest.raises(ValueError):
+            PoissonProcess(float("nan"))
+
+    def test_empirical_rate(self):
+        rng = np.random.default_rng(1)
+        n = PoissonProcess(3.0).sample(rng, 0.0, 10_000.0).size
+        assert n == pytest.approx(30_000, rel=0.02)
+
+    def test_mean_rate(self):
+        assert PoissonProcess(3.0).mean_rate(0.0, 5.0) == 3.0
+
+
+class TestInhomogeneous:
+    def test_empirical_rate_tracks_intensity(self):
+        """Thinning must reproduce the intensity empirically: compare
+        per-bin arrival counts of a diurnal curve against its
+        integrated rate over many windows."""
+        proc = DiurnalPoisson(5.0, amplitude=1.0, period=8.0)
+        rng = np.random.default_rng(7)
+        t = proc.sample(rng, 0.0, 4_000.0)
+        # fold onto one period, 8 bins of width 1
+        counts, _ = np.histogram(t % 8.0, bins=8, range=(0.0, 8.0))
+        w = 2 * np.pi / 8.0
+        edges = np.arange(9.0)
+        # integral of 5(1+sin(wt)) over each bin
+        expect = np.diff(5.0 * (edges - (np.cos(w * edges)
+                                         - 1.0) / w)) * 500
+        # ~4 Poisson sigmas of slack on the smallest bin (seeded run)
+        np.testing.assert_allclose(counts, expect, rtol=0.05, atol=65)
+
+    def test_overall_rate_matches_base(self):
+        proc = DiurnalPoisson(5.0, amplitude=1.0, period=8.0)
+        n = proc.sample(np.random.default_rng(3), 0.0, 4_000.0).size
+        assert n == pytest.approx(20_000, rel=0.03)
+        assert proc.mean_rate(0.0, 8.0) == pytest.approx(5.0, rel=1e-3)
+
+    def test_flash_crowd_surges(self):
+        proc = FlashCrowd(0.5, 20.0, start=100.0, duration=10.0)
+        rng = np.random.default_rng(11)
+        t = proc.sample(rng, 0.0, 200.0)
+        in_surge = ((t >= 100.0) & (t < 110.0)).sum()
+        outside = t.size - in_surge
+        assert in_surge == pytest.approx(200, rel=0.25)
+        assert outside == pytest.approx(95, rel=0.35)
+
+    def test_envelope_violation_raises(self):
+        proc = InhomogeneousPoisson(lambda t: np.full(np.shape(t), 5.0),
+                                    rate_max=1.0)
+        with pytest.raises(ValueError, match="envelope"):
+            proc.sample(np.random.default_rng(0), 0.0, 100.0)
+
+    def test_negative_rate_raises(self):
+        proc = InhomogeneousPoisson(lambda t: np.full(np.shape(t), -1.0),
+                                    rate_max=1.0)
+        with pytest.raises(ValueError):
+            proc.sample(np.random.default_rng(0), 0.0, 100.0)
+
+    def test_rejects_bad_params(self):
+        with pytest.raises(ValueError):
+            DiurnalPoisson(1.0, amplitude=1.5)
+        with pytest.raises(ValueError):
+            FlashCrowd(2.0, 1.0, start=0.0, duration=1.0)  # peak < base
+
+
+class TestTrace:
+    def test_chunking_is_exact(self):
+        """Any partition of the horizon replays the identical trace —
+        the property the fleet event/epoch cross-check rests on."""
+        tr = TraceArrivals([3.0, 0.5, 7.2, 5.0, 5.0 + 1e-12])
+        rng = np.random.default_rng(0)
+        whole = tr.sample(rng, 0.0, 10.0)
+        chunks = np.concatenate([tr.sample(rng, a, b) for a, b in
+                                 [(0.0, 2.5), (2.5, 5.0), (5.0, 10.0)]])
+        np.testing.assert_array_equal(whole, chunks)
+        assert whole.size == 5
+
+    def test_window_is_half_open(self):
+        tr = TraceArrivals([1.0, 2.0, 3.0])
+        assert tr.sample(np.random.default_rng(0), 1.0,
+                         3.0).tolist() == [1.0, 2.0]
+
+    def test_rejects_non_finite(self):
+        with pytest.raises(ValueError):
+            TraceArrivals([1.0, float("nan")])
+        with pytest.raises(ValueError):
+            TraceArrivals([[1.0, 2.0]])
+
+
+class TestLoadTrace:
+    def test_csv_roundtrip(self, tmp_path):
+        p = tmp_path / "trace.csv"
+        p.write_text("cell,arrival,extra\n0,1.5,x\n1,9.0,y\n0,0.25,z\n")
+        assert load_trace(p, cell=0).times.tolist() == [0.25, 1.5]
+        assert load_trace(p, cell=1).times.tolist() == [9.0]
+        assert load_trace(p, cell=2).times.size == 0
+
+    def test_csv_missing_columns(self, tmp_path):
+        p = tmp_path / "trace.csv"
+        p.write_text("time\n1.5\n")
+        with pytest.raises(ValueError, match="'cell' and 'arrival'"):
+            load_trace(p)
+
+    def test_csv_malformed_rows_name_the_row(self, tmp_path):
+        p = tmp_path / "trace.csv"
+        p.write_text("cell,arrival\n0,1.5\n0,oops\n")
+        with pytest.raises(ValueError, match="row 3.*not a number"):
+            load_trace(p)
+        p.write_text("cell,arrival\n0,\n")
+        with pytest.raises(ValueError, match="row 2.*missing"):
+            load_trace(p)
+        p.write_text("cell,arrival\nzero,1.5\n")
+        with pytest.raises(ValueError, match="not an integer"):
+            load_trace(p)
+        p.write_text("cell,arrival\n0,-2.0\n")
+        with pytest.raises(ValueError, match="finite and >= 0"):
+            load_trace(p)
+
+    def test_json_flat_and_keyed(self, tmp_path):
+        p = tmp_path / "trace.json"
+        p.write_text(json.dumps([2.0, 1.0]))
+        assert load_trace(p).times.tolist() == [1.0, 2.0]
+        p.write_text(json.dumps({"0": [1.0], "3": [4.0, 2.0]}))
+        assert load_trace(p, cell=3).times.tolist() == [2.0, 4.0]
+
+    def test_json_errors_name_the_problem(self, tmp_path):
+        p = tmp_path / "trace.json"
+        p.write_text("not json {")
+        with pytest.raises(ValueError, match="not valid JSON"):
+            load_trace(p)
+        p.write_text(json.dumps([1.0, "x"]))
+        with pytest.raises(ValueError, match="entry 1.*not a number"):
+            load_trace(p)
+        p.write_text(json.dumps([1.0]))
+        with pytest.raises(ValueError, match="cell=2"):
+            load_trace(p, cell=2)
+        p.write_text(json.dumps({"0": [1.0]}))
+        with pytest.raises(ValueError, match="no trace for cell 5"):
+            load_trace(p, cell=5)
+        p.write_text(json.dumps({"0": 17}))
+        with pytest.raises(ValueError, match="list of timestamps"):
+            load_trace(p)
+        p.write_text(json.dumps(42))
+        with pytest.raises(ValueError, match="list of times"):
+            load_trace(p)
+
+
+class TestCorrelatedRates:
+    def test_mean_and_positivity(self):
+        rates = np.concatenate([
+            correlated_rates(np.random.default_rng(s), 64, 2.0,
+                             correlation=0.5)
+            for s in range(200)])
+        assert np.all(rates > 0)
+        assert rates.mean() == pytest.approx(2.0, rel=0.02)
+
+    def test_full_correlation_moves_together(self):
+        rates = correlated_rates(np.random.default_rng(5), 16, 2.0,
+                                 correlation=1.0)
+        assert np.ptp(rates) == pytest.approx(0.0, abs=1e-12)
+
+    def test_rejects_bad_params(self):
+        with pytest.raises(ValueError):
+            correlated_rates(np.random.default_rng(0), 4, 1.0,
+                             correlation=1.5)
+        with pytest.raises(ValueError):
+            correlated_rates(np.random.default_rng(0), 0, 1.0)
