@@ -64,6 +64,7 @@ _SUITE_PREFIXES = (
     ("online_", "online"),
     ("multiserver_", "multiserver"),
     ("fleet_", "fleet"),
+    ("e2e_", "e2e"),
     ("api_", "api"),
 )
 

@@ -28,7 +28,7 @@ import sys
 import time
 from pathlib import Path
 
-from benchmarks import (ablations, beyond_paper, churn,
+from benchmarks import (ablations, beyond_paper, churn, e2e,
                         fig1a_delay_vs_batch, fig1b_fid_vs_steps,
                         fig2a_e2e_delay, fig2b_fid_vs_services,
                         fig2c_fid_vs_min_delay, fleet, kernels_bench,
@@ -71,6 +71,7 @@ SUITES = {
     "multiserver": multiserver.run,
     "churn": churn.run,
     "fleet": fleet.run,
+    "e2e": e2e.run,
     "planner_speed": planner_speed.run,
     "roofline": roofline_report.run,
     "kernels": kernels_bench.run,

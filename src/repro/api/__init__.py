@@ -6,24 +6,35 @@ a string-keyed registry per component kind, the ``Provisioner`` facade
 whose ``run`` is the one-call static pipeline, its event-driven sibling
 ``OnlineProvisioner`` (arrivals over time + on-arrival replanning,
 docs/SCENARIOS.md), ``MultiServerProvisioner`` (placement x
-per-cell provisioning over M edge servers), and ``FleetProvisioner``
+per-cell provisioning over M edge servers), ``FleetProvisioner``
 (population-scale fleets with named arrival processes,
-docs/SCENARIOS.md "Fleet-scale simulation").
+docs/SCENARIOS.md "Fleet-scale simulation"), and the closed execution
+loop (``execute_plan`` / ``execute_report`` behind the EXECUTORS
+registry — STACKING plans driven on the real denoiser with online
+delay refit, docs/SCENARIOS.md "Sim-to-real").
+
+``provision(scenario, ...)`` is the single front door: it dispatches
+on scenario shape and reproduces the matching facade's ``run()``.
 """
 
+from repro.api.base import BaseProvisioner, provision
 from repro.api.protocols import (Allocator, OffsetScheduler, Scheduler,
                                  Workload, WorkloadOutput)
 from repro.api.registry import (ADMISSIONS, ALLOCATORS, ARRIVALS,
-                                PLACEMENTS, SCHEDULERS, WORKLOADS,
+                                EXECUTORS, PLACEMENTS, SCHEDULERS,
+                                WORKLOADS,
                                 get_admission, get_allocator,
-                                get_arrival, get_placement,
-                                get_scheduler, get_workload,
+                                get_arrival, get_executor,
+                                get_placement, get_scheduler,
+                                get_workload,
                                 list_admissions, list_allocators,
-                                list_arrivals, list_placements,
-                                list_schedulers, list_workloads,
+                                list_arrivals, list_executors,
+                                list_placements, list_schedulers,
+                                list_workloads,
                                 register_admission, register_allocator,
-                                register_arrival, register_placement,
-                                register_scheduler, register_workload)
+                                register_arrival, register_executor,
+                                register_placement, register_scheduler,
+                                register_workload)
 # entry modules populate the registries on import
 from repro.api import allocators as _allocators   # noqa: F401
 from repro.api import schedulers as _schedulers   # noqa: F401
@@ -31,6 +42,7 @@ from repro.api import workloads as _workloads     # noqa: F401
 from repro.api import online as _online           # noqa: F401
 from repro.api import placements as _placements   # noqa: F401
 from repro.api import fleet as _fleet             # noqa: F401
+from repro.api import execution as _execution     # noqa: F401
 from repro.api.workloads import DecodeWorkload, DiffusionWorkload
 from repro.api.provisioner import Provisioner, ProvisionReport
 from repro.api.online import OnlineProvisioner, OnlineReport
@@ -39,21 +51,30 @@ from repro.api.multiserver import (MultiOnlineReport,
                                    MultiServerProvisioner)
 from repro.api.fleet import (FleetProvisioner, FleetReport,
                              make_fleet_scenario)
+from repro.api.execution import (execute_plan, execute_report,
+                                 make_session, replay_result)
+from repro.core.execution import (ExecutionLoop, ExecutionResult,
+                                  SimulatedSession)
 
 __all__ = [
     "Allocator", "OffsetScheduler", "Scheduler", "Workload",
     "WorkloadOutput",
-    "ADMISSIONS", "ALLOCATORS", "ARRIVALS", "PLACEMENTS", "SCHEDULERS",
-    "WORKLOADS",
+    "ADMISSIONS", "ALLOCATORS", "ARRIVALS", "EXECUTORS", "PLACEMENTS",
+    "SCHEDULERS", "WORKLOADS",
     "register_admission", "register_allocator", "register_arrival",
-    "register_placement", "register_scheduler", "register_workload",
-    "get_admission", "get_allocator", "get_arrival", "get_placement",
-    "get_scheduler", "get_workload",
+    "register_executor", "register_placement", "register_scheduler",
+    "register_workload",
+    "get_admission", "get_allocator", "get_arrival", "get_executor",
+    "get_placement", "get_scheduler", "get_workload",
     "list_admissions", "list_allocators", "list_arrivals",
-    "list_placements", "list_schedulers", "list_workloads",
+    "list_executors", "list_placements", "list_schedulers",
+    "list_workloads",
     "DecodeWorkload", "DiffusionWorkload",
+    "BaseProvisioner", "provision",
     "Provisioner", "ProvisionReport",
     "OnlineProvisioner", "OnlineReport",
     "MultiServerProvisioner", "MultiProvisionReport", "MultiOnlineReport",
     "FleetProvisioner", "FleetReport", "make_fleet_scenario",
+    "execute_plan", "execute_report", "make_session", "replay_result",
+    "ExecutionLoop", "ExecutionResult", "SimulatedSession",
 ]

@@ -35,8 +35,11 @@ def inv_se(scn: Scenario, scheduler=None, delay: DelayModel = None,
 
 @register_allocator("pso")
 def pso(scn: Scenario, scheduler, delay: DelayModel,
-        quality: QualityModel, **kw) -> np.ndarray:
-    return pso_allocate(scn, scheduler, delay, quality, **kw).alloc
+        quality: QualityModel, *, seed: int = 0, **kw) -> np.ndarray:
+    # seed is explicit (not swallowed by **kw) so the facades' seed=
+    # kwarg can find it by signature (BaseProvisioner._seeded_kwargs)
+    return pso_allocate(scn, scheduler, delay, quality, seed=seed,
+                        **kw).alloc
 
 
 @register_allocator("coordinate")

@@ -35,6 +35,7 @@ from typing import Callable, List, Optional, Sequence, Union
 
 import numpy as np
 
+from repro.api.base import BaseProvisioner, report_dict
 from repro.api.registry import (ARRIVALS, display_name, register_arrival)
 from repro.core.delay_model import DelayModel
 from repro.core.fleet import (FleetCell, FleetResult, FleetScenario,
@@ -229,10 +230,31 @@ class FleetReport:
                 f"peak_rows={r.peak_live_rows} "
                 f"planner_calls={r.planner_calls}")
 
+    def to_dict(self) -> dict:
+        """Common report protocol (``repro.api.base.report_dict``)."""
+        r = self.result
+        return report_dict(
+            "fleet", mean_fid=self.mean_fid,
+            outage_rate=self.outage_rate, makespan=self.fleet.horizon,
+            components={"allocator": self.allocator_name,
+                        "admission": self.admission_name or "admit_all",
+                        "placement": self.placement_name},
+            telemetry={"arrivals": r.arrivals, "admitted": r.admitted,
+                       "rejected": r.rejected, "delay_p95": r.delay_p95,
+                       "peak_live_rows": r.peak_live_rows,
+                       "planner_calls": r.planner_calls,
+                       "mode": r.mode, "engine": r.engine},
+            reject_rate=self.reject_rate,
+            n_cells=self.fleet.n_cells)
 
-class FleetProvisioner:
+
+class FleetProvisioner(BaseProvisioner):
     """``simulate_fleet`` behind names — the population-scale sibling
-    of ``OnlineProvisioner``.
+    of ``OnlineProvisioner``.  ``engine``/``devices``/``seed``/
+    ``execute`` are the unified facade kwargs (``repro.api.base``);
+    ``seed=`` re-seeds the fleet's arrival streams, and execution on a
+    real model is not defined at fleet scale (``execute=`` truthy
+    raises).
 
     ``admission`` is a fleet policy ``(cell_index, projected
     ServiceOutcome) -> bool`` or ``None`` (admit all); the single-cell
@@ -246,19 +268,28 @@ class FleetProvisioner:
                  delay: Optional[DelayModel] = None,
                  quality: Optional[QualityModel] = None,
                  engine: Optional[str] = None,
-                 devices=None):
+                 devices=None, seed: Optional[int] = None,
+                 execute=None, execute_kwargs: Optional[dict] = None):
+        if seed is not None:
+            fleet = dataclasses.replace(fleet, seed=int(seed))
+        super().__init__(fleet, engine=engine, devices=devices,
+                         seed=seed, execute=execute,
+                         execute_kwargs=execute_kwargs)
         self.fleet = fleet
         self.allocator = allocator
         self.admission = admission
         self.delay = delay
         self.quality = quality
-        self.engine = engine
-        self.devices = devices
 
     def run(self, mode: str = "epoch", *,
             epoch: Optional[float] = None,
             placement: str = "least_busy",
-            reservoir: int = 4096) -> FleetReport:
+            reservoir: int = 4096, execute=None) -> FleetReport:
+        if self._resolve_execute(execute):
+            raise NotImplementedError(
+                "fleet runs are streaming aggregates over thousands of "
+                "simulated cells; execution on a real model is per "
+                "cell/scenario (Provisioner execute=)")
         result = simulate_fleet(
             self.fleet, allocator=self.allocator,
             admission=self.admission, delay=self.delay,

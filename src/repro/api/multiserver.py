@@ -33,6 +33,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.api.base import BaseProvisioner, report_dict
 from repro.api.registry import (ADMISSIONS, ALLOCATORS, PLACEMENTS,
                                 SCHEDULERS, display_name)
 # entry modules populate the underlying registries on import
@@ -90,6 +91,21 @@ class MultiProvisionReport:
                 f"services/server={counts}")
         return head + "\n" + self.sim.summary()
 
+    def to_dict(self) -> dict:
+        """Common report protocol (``repro.api.base.report_dict``)."""
+        makespans = [r.plan.makespan() for r in self.reports]
+        return report_dict(
+            "multi", mean_fid=self.mean_fid,
+            outage_rate=self.outage_rate,
+            makespan=max(makespans) if makespans else None,
+            components={"placement": self.placement_name,
+                        "scheduler": self.scheduler_name,
+                        "allocator": self.allocator_name},
+            telemetry={"services_per_server": {
+                str(sid): rep.scenario.K
+                for sid, rep in zip(self.server_ids, self.reports)}},
+            n_servers=self.n_servers)
+
 
 @dataclasses.dataclass
 class MultiOnlineReport:
@@ -131,17 +147,37 @@ class MultiOnlineReport:
                 f"handoffs={self.handoffs}")
         return head + "\n" + self.result.result.summary()
 
+    def to_dict(self) -> dict:
+        """Common report protocol (``repro.api.base.report_dict``)."""
+        arrival = {s.id: s.arrival for s in self.scenario.services}
+        times = [arrival[o.id] + o.e2e_delay
+                 for o in self.result.result.outcomes if o.steps > 0]
+        return report_dict(
+            "multi_online", mean_fid=self.mean_fid,
+            outage_rate=self.outage_rate,
+            makespan=max(times) if times else None,
+            components={"placement": self.placement_name,
+                        "scheduler": self.scheduler_name,
+                        "allocator": self.allocator_name,
+                        "admission": self.admission_name},
+            telemetry={"handoffs": self.handoffs},
+            reject_rate=self.reject_rate,
+            n_servers=self.scenario.n_servers)
 
-class MultiServerProvisioner:
+
+class MultiServerProvisioner(BaseProvisioner):
     """Facade binding a (multi-server) scenario to one
     (placement, scheduler, allocator) choice.  All three accept registry
     names or protocol instances; ``placement_kwargs`` /
     ``allocator_kwargs`` pass through to the underlying strategies.
+    ``engine``/``devices``/``seed``/``execute`` are the unified facade
+    kwargs (``repro.api.base``).
 
     The static ``run`` is analytic (allocation + plans + simulated
     timelines); attach workloads per cell by feeding each
     ``reports[i]`` sub-scenario to a ``Provisioner`` if execution on a
-    real model is needed.
+    real model is needed (``execute=`` here raises
+    ``NotImplementedError`` pointing at that per-cell path).
 
     The ``placement`` strategy is a *static* full-assignment solver and
     applies to ``run`` only; ``run_online`` routes arrivals one at a
@@ -150,17 +186,36 @@ class MultiServerProvisioner:
     does not know about yet.
     """
 
-    def __init__(self, scenario: Scenario, placement="least_loaded",
-                 scheduler="stacking", allocator="pso",
-                 delay: Optional[DelayModel] = None,
+    _LEGACY = ("placement", "scheduler", "allocator", "delay", "quality",
+               "placement_kwargs", "allocator_kwargs", "engine")
+    _LEGACY_DEFAULTS = {"placement": "least_loaded",
+                        "scheduler": "stacking", "allocator": "pso",
+                        "delay": None, "quality": None,
+                        "placement_kwargs": None,
+                        "allocator_kwargs": None, "engine": None}
+
+    def __init__(self, scenario: Scenario, *args,
+                 placement="least_loaded", scheduler="stacking",
+                 allocator="pso", delay: Optional[DelayModel] = None,
                  quality: Optional[QualityModel] = None,
                  placement_kwargs: Optional[dict] = None,
                  allocator_kwargs: Optional[dict] = None,
-                 engine: Optional[str] = None):
-        # engine: planning-engine pin for every cell's plans/replans
-        # ("vec"/"scalar", repro.core.arrays; None = process default)
-        self.engine = engine
-        self.scenario = scenario
+                 engine: Optional[str] = None, devices=None,
+                 seed: Optional[int] = None, execute=None,
+                 execute_kwargs: Optional[dict] = None):
+        kw = self._legacy_positionals(args, dict(
+            placement=placement, scheduler=scheduler, allocator=allocator,
+            delay=delay, quality=quality,
+            placement_kwargs=placement_kwargs,
+            allocator_kwargs=allocator_kwargs, engine=engine))
+        placement, scheduler = kw["placement"], kw["scheduler"]
+        allocator, delay, quality = (kw["allocator"], kw["delay"],
+                                     kw["quality"])
+        placement_kwargs, allocator_kwargs = (kw["placement_kwargs"],
+                                              kw["allocator_kwargs"])
+        super().__init__(scenario, engine=kw["engine"], devices=devices,
+                         seed=seed, execute=execute,
+                         execute_kwargs=execute_kwargs)
         self.placement_name = display_name(placement)
         self.scheduler_name = display_name(scheduler)
         self.allocator_name = display_name(allocator)
@@ -170,7 +225,16 @@ class MultiServerProvisioner:
         self.delay = delay if delay is not None else DelayModel()
         self.quality = quality if quality is not None else PowerLawFID()
         self.placement_kwargs = dict(placement_kwargs or {})
-        self.allocator_kwargs = dict(allocator_kwargs or {})
+        self.allocator_kwargs = self._seeded_kwargs(allocator,
+                                                    allocator_kwargs)
+
+    def _check_no_execute(self, execute):
+        mode = self._resolve_execute(execute)
+        if mode:
+            raise NotImplementedError(
+                "multi-server execution is per cell: run() then feed "
+                "each reports[i] to repro.api.execution.execute_report "
+                "(or a per-cell Provisioner with execute=)")
 
     def _allocator(self):
         if self.allocator_kwargs:
@@ -184,14 +248,15 @@ class MultiServerProvisioner:
             self.scenario, self.scheduler, self._allocator(), self.delay,
             self.quality, **self.placement_kwargs))
 
-    def run(self, *, assignment=None,
-            validate: bool = True) -> MultiProvisionReport:
+    def run(self, *, assignment=None, validate: bool = True,
+            execute=None) -> MultiProvisionReport:
         """Place -> per-cell allocate -> plan -> validate -> simulate.
 
         ``assignment`` overrides the placement stage (a precomputed
         server index per service), mirroring ``Provisioner.run``'s
         compositionality.
         """
+        self._check_no_execute(execute)
         if assignment is None:
             assignment = self.place()
         assignment = np.asarray(assignment)
@@ -222,8 +287,8 @@ class MultiServerProvisioner:
 
     def run_online(self, admission="admit_all", online_placement=None,
                    admission_kwargs: Optional[dict] = None, *,
-                   handoff: bool = False,
-                   validate: bool = True) -> MultiOnlineReport:
+                   handoff: bool = False, validate: bool = True,
+                   execute=None) -> MultiOnlineReport:
         """Event-driven arrivals over the M cells.
 
         ``online_placement`` is a per-arrival router
@@ -237,6 +302,7 @@ class MultiServerProvisioner:
         to a strictly better cell at each replan instant (the report's
         ``handoffs`` counts the moves).
         """
+        self._check_no_execute(execute)
         adm = ADMISSIONS.resolve(admission)
         if admission_kwargs:
             adm = functools.partial(adm, **admission_kwargs)

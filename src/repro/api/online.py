@@ -38,11 +38,12 @@ Custom policies register like any other component:
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Dict, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
+from repro.api.base import BaseProvisioner, report_dict
 from repro.api.registry import (ADMISSIONS, ALLOCATORS, SCHEDULERS,
-                                display_name, register_admission)
+                                WORKLOADS, display_name,
+                                register_admission)
 # entry modules populate the scheduler/allocator registries on import
 from repro.api import allocators as _allocators   # noqa: F401
 from repro.api import schedulers as _schedulers   # noqa: F401
@@ -86,6 +87,9 @@ class OnlineReport:
     scheduler_name: str = ""
     allocator_name: str = ""
     admission_name: str = ""
+    content: Optional[Dict[int, Any]] = None  # execute=True replay output
+    timings: List[Tuple[int, float]] = dataclasses.field(
+        default_factory=list)                 # measured (batch_size, s)
 
     @property
     def mean_fid(self) -> float:
@@ -99,58 +103,128 @@ class OnlineReport:
     def reject_rate(self) -> float:
         return self.result.reject_rate
 
+    def makespan(self) -> Optional[float]:
+        """Absolute completion time of the last admitted service (e2e
+        delays are arrival-relative)."""
+        arrival = {s.id: s.arrival for s in self.scenario.services}
+        times = [arrival[o.id] + o.e2e_delay for o in self.result.outcomes
+                 if o.steps > 0]
+        return max(times) if times else None
+
     def summary(self) -> str:
         head = (f"[online] scheduler={self.scheduler_name} "
                 f"allocator={self.allocator_name} "
                 f"admission={self.admission_name}")
         return head + "\n" + self.result.summary()
 
+    def to_dict(self) -> dict:
+        """Common report protocol (``repro.api.base.report_dict``)."""
+        nb = len(self.result.executed_batches or [])
+        return report_dict(
+            "online", mean_fid=self.mean_fid,
+            outage_rate=self.outage_rate, makespan=self.makespan(),
+            components={"scheduler": self.scheduler_name,
+                        "allocator": self.allocator_name,
+                        "admission": self.admission_name},
+            telemetry={"batches": nb,
+                       "timings": [[int(x), float(s)]
+                                   for x, s in self.timings]},
+            reject_rate=self.reject_rate,
+            n_admitted=len(self.result.outcomes))
 
-class OnlineProvisioner:
+
+class OnlineProvisioner(BaseProvisioner):
     """Event-driven counterpart of ``Provisioner``: requests arrive at
     ``ServiceRequest.arrival``, each admitted arrival re-runs
     allocate -> plan over the residual scenario with in-flight batches
     pinned.  ``scheduler`` / ``allocator`` / ``admission`` take registry
     names or protocol instances; ``allocator_kwargs`` /
-    ``admission_kwargs`` pass through to the underlying callables."""
+    ``admission_kwargs`` pass through to the underlying callables.
+    ``engine``/``devices``/``seed``/``execute`` are the unified facade
+    kwargs (``repro.api.base``); ``execute=True`` replays the committed
+    batch sequence on ``workload``'s real executor after the simulation
+    (``repro.api.execution.replay_result``)."""
 
-    def __init__(self, scenario: Scenario, scheduler="stacking",
+    _LEGACY = ("scheduler", "allocator", "admission", "delay", "quality",
+               "allocator_kwargs", "admission_kwargs", "engine")
+    _LEGACY_DEFAULTS = {"scheduler": "stacking", "allocator": "pso",
+                        "admission": "admit_all", "delay": None,
+                        "quality": None, "allocator_kwargs": None,
+                        "admission_kwargs": None, "engine": None}
+
+    def __init__(self, scenario: Scenario, *args, scheduler="stacking",
                  allocator="pso", admission="admit_all",
                  delay: Optional[DelayModel] = None,
                  quality: Optional[QualityModel] = None,
                  allocator_kwargs: Optional[dict] = None,
                  admission_kwargs: Optional[dict] = None,
-                 engine: Optional[str] = None):
-        # engine: planning-engine pin for every replan of a run
-        # ("vec"/"scalar", repro.core.arrays; None = process default)
-        self.engine = engine
-        self.scenario = scenario
+                 engine: Optional[str] = None, workload=None,
+                 devices=None, seed: Optional[int] = None, execute=None,
+                 execute_kwargs: Optional[dict] = None):
+        kw = self._legacy_positionals(args, dict(
+            scheduler=scheduler, allocator=allocator, admission=admission,
+            delay=delay, quality=quality,
+            allocator_kwargs=allocator_kwargs,
+            admission_kwargs=admission_kwargs, engine=engine))
+        scheduler, allocator = kw["scheduler"], kw["allocator"]
+        admission, delay, quality = (kw["admission"], kw["delay"],
+                                     kw["quality"])
+        allocator_kwargs, admission_kwargs = (kw["allocator_kwargs"],
+                                              kw["admission_kwargs"])
+        super().__init__(scenario, engine=kw["engine"], devices=devices,
+                         seed=seed, execute=execute,
+                         execute_kwargs=execute_kwargs)
         self.scheduler_name = display_name(scheduler)
         self.allocator_name = display_name(allocator)
         self.admission_name = display_name(admission)
         self.scheduler = SCHEDULERS.resolve(scheduler)
         self.allocator = ALLOCATORS.resolve(allocator)
         self.admission = ADMISSIONS.resolve(admission)
-        self.delay = delay if delay is not None else DelayModel()
-        self.quality = quality if quality is not None else PowerLawFID()
-        self.allocator_kwargs = dict(allocator_kwargs or {})
+        wl = WORKLOADS.resolve(workload) if workload is not None else None
+        if isinstance(wl, type):
+            wl = wl()
+        self.workload = wl
+        self.delay = delay if delay is not None else (
+            wl.default_delay() if wl else DelayModel())
+        self.quality = quality if quality is not None else (
+            wl.default_quality() if wl else PowerLawFID())
+        self.allocator_kwargs = self._seeded_kwargs(allocator,
+                                                    allocator_kwargs)
         self.admission_kwargs = dict(admission_kwargs or {})
 
-    def run(self, *, validate: bool = True) -> OnlineReport:
-        allocator = self.allocator
-        if self.allocator_kwargs:
-            allocator = functools.partial(allocator,
-                                          **self.allocator_kwargs)
-        admission = self.admission
-        if self.admission_kwargs:
-            admission = functools.partial(admission,
-                                          **self.admission_kwargs)
+    def run(self, *, validate: bool = True, execute=None,
+            key=None) -> OnlineReport:
+        """Simulate the arrival sequence; with ``execute=True`` (or a
+        constructor default), replay the committed batches on the
+        workload's executor and attach content + measured timings."""
+        from repro.api.execution import with_kwargs
+        mode = self._resolve_execute(execute)
+        if mode in ("open", "closed"):
+            raise ValueError(
+                "online execution replays the simulated batch sequence; "
+                "use execute=True (closed-loop modes apply to the static "
+                "Provisioner)")
+        allocator = with_kwargs(self.allocator, self.allocator_kwargs)
+        admission = with_kwargs(self.admission, self.admission_kwargs)
         result = simulate_online(
             self.scenario, self.scheduler, allocator,
             delay=self.delay, quality=self.quality,
             admission=admission, validate=validate, engine=self.engine)
-        return OnlineReport(
+        report = OnlineReport(
             scenario=self.scenario, result=result, delay=self.delay,
             quality=self.quality, scheduler_name=self.scheduler_name,
             allocator_name=self.allocator_name,
             admission_name=self.admission_name)
+        if mode is True:
+            if self.workload is None and \
+                    "executor" not in self.execute_kwargs:
+                raise ValueError(
+                    "execute=True needs a workload= to replay on "
+                    "(or an executor= in execute_kwargs)")
+            from repro.api.execution import replay_result
+            out = replay_result(self.workload, result, self.delay,
+                                key=self._resolve_key(key),
+                                **self.execute_kwargs)
+            report.content = out.content
+            report.timings = list(out.timings or [])
+        return report

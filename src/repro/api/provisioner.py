@@ -23,6 +23,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.api.base import BaseProvisioner, report_dict
 from repro.api.protocols import WorkloadOutput
 from repro.api.registry import (ALLOCATORS, SCHEDULERS, WORKLOADS,
                                 display_name)
@@ -32,6 +33,7 @@ from repro.api import schedulers as _schedulers   # noqa: F401
 from repro.api import workloads as _workloads     # noqa: F401
 from repro.core.bandwidth import make_plan
 from repro.core.delay_model import DelayModel, fit
+from repro.core.execution import ExecutionResult
 from repro.core.plan import BatchPlan
 from repro.core.quality_model import PowerLawFID, QualityModel
 from repro.core.service import Scenario
@@ -54,6 +56,7 @@ class ProvisionReport:
     scheduler_name: str = ""
     allocator_name: str = ""
     workload_name: str = ""
+    execution: Optional[ExecutionResult] = None  # closed/open-loop run
 
     @property
     def mean_fid(self) -> float:
@@ -83,25 +86,65 @@ class ProvisionReport:
                 f"scheduler={self.scheduler_name} "
                 f"allocator={self.allocator_name} "
                 f"batches={self.plan.num_batches}")
-        return head + "\n" + self.sim.summary()
+        body = head + "\n" + self.sim.summary()
+        if self.execution is not None:
+            body += "\n" + self.execution.summary()
+        return body
+
+    def to_dict(self) -> dict:
+        """Common report protocol (see ``repro.api.base.report_dict``):
+        JSON-serializable aggregates, no model artifacts."""
+        d = report_dict(
+            "provision", mean_fid=self.mean_fid,
+            outage_rate=self.outage_rate, makespan=self.plan.makespan(),
+            components={"scheduler": self.scheduler_name,
+                        "allocator": self.allocator_name,
+                        "workload": self.workload_name},
+            telemetry={"batches": self.plan.num_batches,
+                       "timings": [[int(x), float(s)]
+                                   for x, s in self.timings]},
+            n_services=self.scenario.K)
+        if self.execution is not None:
+            d["execution"] = self.execution.to_dict()
+        return d
 
 
-class Provisioner:
+class Provisioner(BaseProvisioner):
     """Facade binding a scenario to one (workload, scheduler, allocator)
     choice.  ``scheduler``/``allocator``/``workload`` accept registry
     names or protocol instances; ``allocator_kwargs`` pass through to the
-    underlying P1 solver (``num_particles``, ``iters``, ``seed``, ...)."""
+    underlying P1 solver (``num_particles``, ``iters``, ``seed``, ...).
+    ``engine``/``devices``/``seed``/``execute`` are the unified facade
+    kwargs (``repro.api.base``); ``execute_kwargs`` tunes the closed
+    loop (``window``, ``drift_tol``, ``min_batches``, ``max_replans``,
+    ``headroom``, ``executor``, ``executor_kwargs``)."""
 
-    def __init__(self, scenario: Scenario, workload=None,
+    _LEGACY = ("workload", "scheduler", "allocator", "delay", "quality",
+               "allocator_kwargs", "engine")
+    _LEGACY_DEFAULTS = {"workload": None, "scheduler": "stacking",
+                        "allocator": "pso", "delay": None,
+                        "quality": None, "allocator_kwargs": None,
+                        "engine": None}
+
+    def __init__(self, scenario: Scenario, *args, workload=None,
                  scheduler="stacking", allocator="pso",
                  delay: Optional[DelayModel] = None,
                  quality: Optional[QualityModel] = None,
                  allocator_kwargs: Optional[dict] = None,
-                 engine: Optional[str] = None):
-        # engine: planning-engine pin for this facade's P1/P2 stages
-        # ("vec"/"scalar", repro.core.arrays; None = process default)
-        self.engine = engine
-        self.scenario = scenario
+                 engine: Optional[str] = None, devices=None,
+                 seed: Optional[int] = None, execute=None,
+                 execute_kwargs: Optional[dict] = None):
+        kw = self._legacy_positionals(args, dict(
+            workload=workload, scheduler=scheduler, allocator=allocator,
+            delay=delay, quality=quality,
+            allocator_kwargs=allocator_kwargs, engine=engine))
+        workload, scheduler = kw["workload"], kw["scheduler"]
+        allocator, delay, quality = (kw["allocator"], kw["delay"],
+                                     kw["quality"])
+        allocator_kwargs, engine = kw["allocator_kwargs"], kw["engine"]
+        super().__init__(scenario, engine=engine, devices=devices,
+                         seed=seed, execute=execute,
+                         execute_kwargs=execute_kwargs)
         self.scheduler_name = display_name(scheduler)
         self.allocator_name = display_name(allocator)
         self.scheduler = SCHEDULERS.resolve(scheduler)
@@ -115,7 +158,8 @@ class Provisioner:
             wl.default_delay() if wl else DelayModel())
         self.quality = quality if quality is not None else (
             wl.default_quality() if wl else PowerLawFID())
-        self.allocator_kwargs = dict(allocator_kwargs or {})
+        self.allocator_kwargs = self._seeded_kwargs(allocator,
+                                                    allocator_kwargs)
 
     # -- pipeline stages ------------------------------------------------
     def allocate(self) -> np.ndarray:
@@ -141,11 +185,18 @@ class Provisioner:
         return self.delay
 
     # -- one-call end-to-end --------------------------------------------
-    def run(self, key=None, *, execute: bool = True, timed: bool = False,
+    def run(self, key=None, *, execute=None, timed: bool = False,
             calibrate: bool = False, refit: bool = False,
             validate: bool = True) -> ProvisionReport:
         """Allocate -> plan -> (validate) -> simulate -> execute.
 
+        execute: ``None`` falls back to the constructor's ``execute=``
+            (default: legacy one-shot workload execution).  ``True``
+            runs ``workload.execute`` open loop; ``"open"``/``"closed"``
+            drive the plan through ``repro.core.execution.ExecutionLoop``
+            (measured wall-clock, rolling delay refit; ``"closed"`` also
+            replans mid-flight on drift) and attach the
+            ``ExecutionResult`` as ``report.execution``.
         calibrate: measure the workload's delay curve first and plan with
             the fitted model (Fig.-1a loop).
         timed: record per-batch wall clock during execution.
@@ -154,8 +205,12 @@ class Provisioner:
             loop's update half); implies ``timed=True`` and requires an
             executing workload.
         """
+        mode = self._resolve_execute(execute)
+        if mode is None:
+            mode = True                    # legacy default: execute
+        key = self._resolve_key(key)
         if refit:
-            if not execute or self.workload is None:
+            if mode is False or self.workload is None:
                 raise ValueError(
                     "refit=True needs measured timings: attach a workload "
                     "and keep execute=True")
@@ -168,15 +223,28 @@ class Provisioner:
             plan.validate(gen_deadlines=tp)
         sim = simulate(self.scenario, alloc, plan, self.quality)
         out = WorkloadOutput(content=None)
-        if execute and self.workload is not None:
+        execution = None
+        if mode is True and self.workload is not None:
             out = self.workload.execute(plan, key, timed=timed)
+        elif mode in ("open", "closed"):
+            from repro.api.execution import execute_plan, with_kwargs
+            execution = execute_plan(
+                self.scenario, plan, alloc, self.workload, mode=mode,
+                key=key, scheduler=self.scheduler,
+                allocator=with_kwargs(self.allocator,
+                                      self.allocator_kwargs),
+                delay=self.delay, quality=self.quality,
+                engine=self.engine, validate=validate,
+                **self.execute_kwargs)
+            out = WorkloadOutput(content=execution.content,
+                                 timings=execution.timings)
         report = ProvisionReport(
             scenario=self.scenario, allocation=alloc, tau_prime=tp,
             plan=plan, sim=sim, content=out.content, timings=out.timings,
             delay=self.delay, quality=self.quality,
             scheduler_name=self.scheduler_name,
             allocator_name=self.allocator_name,
-            workload_name=self.workload_name)
+            workload_name=self.workload_name, execution=execution)
         if refit:
             self.delay = report.refit_delay()
         return report

@@ -1,10 +1,11 @@
 """String-keyed registries behind the provisioner API.
 
-Six registries — schedulers (P2 solvers), allocators (P1 solvers),
+Seven registries — schedulers (P2 solvers), allocators (P1 solvers),
 workloads (step executors), admissions (online accept/reject policies),
-placements (multi-server assignment strategies) and arrivals (traffic
-processes for fleet simulation) — so every pipeline component is
-addressable by name
+placements (multi-server assignment strategies), arrivals (traffic
+processes for fleet simulation) and executors (stepwise session
+factories for closed-loop plan execution, ``repro.api.execution``) — so
+every pipeline component is addressable by name
 (``Provisioner(scn, scheduler="stacking", allocator="pso")``,
 ``OnlineProvisioner(scn, admission="deadline_feasible")``,
 ``MultiServerProvisioner(scn, placement="greedy_fid")``) and new
@@ -71,6 +72,7 @@ WORKLOADS = Registry("workload")
 ADMISSIONS = Registry("admission")
 PLACEMENTS = Registry("placement")
 ARRIVALS = Registry("arrival process")
+EXECUTORS = Registry("executor")
 
 
 def register_scheduler(name: str, obj: Any = None, **kw):
@@ -97,6 +99,10 @@ def register_arrival(name: str, obj: Any = None, **kw):
     return ARRIVALS.register(name, obj, **kw)
 
 
+def register_executor(name: str, obj: Any = None, **kw):
+    return EXECUTORS.register(name, obj, **kw)
+
+
 def get_scheduler(name: str) -> Callable:
     return SCHEDULERS.get(name)
 
@@ -121,6 +127,10 @@ def get_arrival(name: str) -> Callable:
     return ARRIVALS.get(name)
 
 
+def get_executor(name: str) -> Callable:
+    return EXECUTORS.get(name)
+
+
 def list_schedulers() -> List[str]:
     return SCHEDULERS.names()
 
@@ -143,3 +153,7 @@ def list_placements() -> List[str]:
 
 def list_arrivals() -> List[str]:
     return ARRIVALS.names()
+
+
+def list_executors() -> List[str]:
+    return EXECUTORS.names()

@@ -81,6 +81,13 @@ class DiffusionWorkload:
         images, timings = self._ex().run(plan, key, timed=timed)
         return WorkloadOutput(content=images, timings=timings)
 
+    def open_session(self, plan: BatchPlan, key: Optional[Any] = None):
+        """Stepwise execution handle (EXECUTORS registry entry): the
+        closed loop in ``repro.core.execution`` drives batches itself."""
+        import jax
+        key = key if key is not None else jax.random.PRNGKey(0)
+        return self._ex().open_session(plan, key)
+
 
 @register_workload("llm_decode")
 class DecodeWorkload:
@@ -137,8 +144,7 @@ class DecodeWorkload:
         rng = np.random.default_rng(self.init_seed * 7919 + service_id)
         return rng.integers(0, vocab, self.prompt_len).astype(np.int32)
 
-    def execute(self, plan: BatchPlan, key: Optional[Any] = None,
-                *, timed: bool = False) -> WorkloadOutput:
+    def _load_requests(self, plan: BatchPlan) -> None:
         from repro.serving.engine import Request
         eng = self._eng()
         top = max(plan.steps_completed.values(), default=0)
@@ -152,6 +158,17 @@ class DecodeWorkload:
             eng.requests[k] = Request(
                 id=k, prompt=self._prompt(k, eng.cfg.vocab_size),
                 deadline=float("inf"))
+
+    def execute(self, plan: BatchPlan, key: Optional[Any] = None,
+                *, timed: bool = False) -> WorkloadOutput:
+        self._load_requests(plan)
+        eng = self._eng()
         out = eng.execute(plan, sample_key=key, timed=timed)
         return WorkloadOutput(content={k: list(v) for k, v in out.items()},
                               timings=list(eng.last_timings))
+
+    def open_session(self, plan: BatchPlan, key: Optional[Any] = None):
+        """Stepwise decode handle (EXECUTORS registry entry); ``key`` is
+        unused — decoding is greedy argmax."""
+        self._load_requests(plan)
+        return self._eng().open_session(plan)

@@ -96,6 +96,11 @@ class OnlineResult:
     mean_fid: float          # over admitted services
     outage_rate: float       # over admitted services
     reject_rate: float       # rejected / all arrivals
+    # committed batch sequence as (start_time, [ids]) — what actually
+    # ran, across every adopted replan.  Populated by the single-track
+    # simulator (None for multi-server runs, where batches interleave
+    # per cell); repro.api.execution replays it on a real executor.
+    executed_batches: Optional[List] = None
 
     @property
     def admitted_ids(self) -> List[int]:
@@ -185,6 +190,45 @@ class _OffsetQuality:
             self.base.fid(0) if i in self.doomed
             else self.base.fid(self.offsets[i] + t)
             for i, t in enumerate(step_counts)]))
+
+
+def offset_aware(scheduler, quality: QualityModel, offsets: List[int]):
+    """Wrap ``(scheduler, quality)`` for a replan over services with
+    already-executed steps (``offsets``, residual scenario order).
+
+    With no executed steps the pair passes through unchanged.  Otherwise
+    the quality model becomes the progress-aware ``_OffsetQuality`` and
+    the scheduler is wrapped so every invocation first refreshes the
+    doomed set for the candidate allocation's tau'; offset-native
+    schedulers (``OffsetScheduler`` protocol) are dispatched through
+    their ``plan(..., offsets)`` entry with the *base* quality model.
+    Shared by ``_ServerTrack.replan`` and ``core.execution`` so both
+    replan paths credit executed steps identically.
+    """
+    if not any(offsets):
+        return scheduler, quality
+    oq = _OffsetQuality(quality, offsets)
+
+    if _offset_native(scheduler):
+        # offset-native dispatch: the scheduler plans against
+        # per-service progress itself (base quality model + offsets);
+        # the _OffsetQuality wrapper still scores the allocator's
+        # fitness evaluations so P1 stays progress-aware too
+        def wrapped(services, tau_prime, delay, q,
+                    _inner=scheduler, _oq=oq, _base=quality,
+                    _off=offsets):
+            _oq.refresh_doomed(services, tau_prime)
+            return _inner.plan(services, tau_prime, delay, _base, _off)
+    else:
+        def wrapped(services, tau_prime, delay, q,
+                    _inner=scheduler, _oq=oq):
+            # every candidate allocation implies fresh tau' — mark
+            # which in-progress services it starves before the inner
+            # scheduler's own mean_fid evaluations run
+            _oq.refresh_doomed(services, tau_prime)
+            return _inner(services, tau_prime, delay, q)
+
+    return wrapped, oq
 
 
 @dataclasses.dataclass
@@ -315,31 +359,8 @@ class _ServerTrack:
         ``t_free`` (the instant this server frees up)."""
         res_scn = self.residual_scenario(ids, t_free)
         offsets = [self.states[s.id].steps_done for s in res_scn.services]
-        scheduler, quality = self.scheduler, self.quality
-        if any(offsets):
-            quality = _OffsetQuality(self.quality, offsets)
-
-            if _offset_native(self.scheduler):
-                # offset-native dispatch: the scheduler plans against
-                # per-service progress itself (base quality model +
-                # offsets); the _OffsetQuality wrapper still scores the
-                # allocator's fitness evaluations so P1 stays
-                # progress-aware too
-                def scheduler(services, tau_prime, delay, q,
-                              _inner=self.scheduler, _oq=quality,
-                              _base=self.quality, _off=offsets):
-                    _oq.refresh_doomed(services, tau_prime)
-                    return _inner.plan(services, tau_prime, delay,
-                                       _base, _off)
-            else:
-                def scheduler(services, tau_prime, delay, q,
-                              _inner=self.scheduler, _oq=quality):
-                    # every candidate allocation implies fresh tau' —
-                    # mark which in-progress services it starves before
-                    # the inner scheduler's own mean_fid evaluations run
-                    _oq.refresh_doomed(services, tau_prime)
-                    return _inner(services, tau_prime, delay, q)
-
+        scheduler, quality = offset_aware(self.scheduler, self.quality,
+                                          offsets)
         alloc = np.asarray(self.allocator(
             res_scn, scheduler, self.delay, quality))
         tp, plan = make_plan(res_scn, alloc, scheduler, self.delay,
@@ -382,6 +403,20 @@ def _project(svc: ServiceRequest, trial: _ActivePlan,
         id=svc.id, deadline=svc.deadline, steps=T, gen_delay=gen,
         tx_delay=tx, e2e_delay=e2e, fid=quality.fid(T),
         met_deadline=(T > 0 and e2e <= svc.deadline + _TIE))
+
+
+def batches_from_log(executed_log: List[tuple]) -> List[tuple]:
+    """Reconstruct the committed batch sequence from a track's
+    ``executed_log``: consecutive entries sharing a start instant are
+    one batch (starts strictly increase across batches — each batch
+    ends, and any replan anchors, after its own start)."""
+    batches: List[tuple] = []
+    for t_start, k, _ in executed_log:
+        if batches and batches[-1][0] == t_start:
+            batches[-1][1].append(k)
+        else:
+            batches.append((t_start, [k]))
+    return batches
 
 
 def _collect_result(scn: Scenario, states: Dict[int, _ServiceState],
@@ -482,8 +517,10 @@ class OnlineSimulation:
                 tr.adopt(svc.id, trial)
             # on reject the current plan keeps running untouched
         tr.execute_until(math.inf)
-        return _collect_result(self.scn, self.states, self.decisions,
-                               self.quality)
+        result = _collect_result(self.scn, self.states, self.decisions,
+                                 self.quality)
+        result.executed_batches = batches_from_log(tr.executed_log)
+        return result
 
 
 def simulate_online(scn: Scenario, scheduler, allocator: AllocatorFn,

@@ -47,6 +47,18 @@ def schedule_table(T: int, num_train_timesteps: int = 1000) -> np.ndarray:
     return np.concatenate([ts, [-1]])
 
 
+def retarget_timesteps(t_start: int, T: int) -> np.ndarray:
+    """Evenly spaced descending T-step subsequence from ``t_start`` down
+    to 0 — rescheduling a partially denoised chain mid-run when a replan
+    changes its total step count.  With ``t_start`` the next timestep the
+    original schedule would have denoised from, the rebuilt chain ends at
+    0 like ``ddim_timesteps`` (repeats, possible when T > t_start + 1,
+    are identity DDIM updates)."""
+    if T <= 0:
+        return np.zeros((0,), np.int64)
+    return np.round(np.linspace(float(t_start), 0.0, T)).astype(np.int64)
+
+
 def ddim_step(eps_fn, x, t_now, t_next, num_train_timesteps: int = 1000):
     """One deterministic DDIM update with *per-sample* timesteps.
 

@@ -40,48 +40,56 @@ class BatchDenoisingExecutor:
 
         self._step = jax.jit(step)
 
+    def open_session(self, plan: BatchPlan, key) -> "DenoiseSession":
+        """Stepwise execution handle for the EXECUTORS registry: batches
+        are driven one ``run_batch`` call at a time so a closed loop
+        (``repro.core.execution``) can observe wall-clock and retarget
+        remaining schedules between batches."""
+        return DenoiseSession(self, plan, key)
+
     def run(self, plan: BatchPlan, key,
             timed: bool = False) -> Tuple[Dict[int, np.ndarray], List]:
         """Execute the plan.  Returns ({service: final image}, timings).
 
         timings: list of (batch_size, seconds) when timed=True.
+        Zero-step services (the planner retired them) are never batched;
+        their latent comes back untouched.
         """
-        cfg = self.cfg
-        shape = (cfg.image_size, cfg.image_size, cfg.in_channels)
-        ids = sorted(plan.steps_completed)
-        keys = jax.random.split(key, max(len(ids), 1))
-        latents = {k: jax.random.normal(kk, shape, jnp.float32)
-                   for k, kk in zip(ids, keys)}
-        # per-service schedule table: step s -> timestep (last entry -1)
-        tables = {k: ddim.schedule_table(max(plan.steps_completed[k], 1),
-                                         self.T_train)
-                  for k in ids}
-
+        sess = self.open_session(plan, key)
         timings = []
         for batch in plan.batches:
-            ks = [k for k, _ in batch]
-            x = jnp.stack([latents[k] for k in ks])
-            t_now = jnp.array([tables[k][s] for k, s in batch], jnp.int32)
-            t_next = jnp.array([tables[k][s + 1] for k, s in batch],
-                               jnp.int32)
+            dt = sess.run_batch([k for k, _ in batch], timed=timed)
             if timed:
-                # timing must be side-effect-free: `y` IS this batch's
-                # one step (also the compile warm-up); the timed call
-                # re-runs the same inputs for a steady-state reading and
-                # its result is discarded, so timed and untimed runs
-                # produce identical images (tests/test_diffusion.py)
-                y = self._step(x, t_now, t_next)
-                y.block_until_ready()
-                t0 = time.perf_counter()
-                self._step(x, t_now, t_next).block_until_ready()
-                timings.append((len(ks), time.perf_counter() - t0))
-                x = y
-            else:
-                x = self._step(x, t_now, t_next)
-            for i, k in enumerate(ks):
-                latents[k] = x[i]
-        images = {k: np.asarray(v) for k, v in latents.items()}
-        return images, timings
+                timings.append((len(batch), dt))
+        return sess.finish(), timings
+
+    def step_batch(self, latents: Dict[int, "jax.Array"],
+                   schedule: Dict[int, Tuple[int, int]],
+                   ks: List[int], timed: bool) -> float:
+        """Advance ``ks`` one DDIM step in ONE batched U-Net call,
+        scattering results back into ``latents``.  Returns measured
+        seconds when ``timed`` (0.0 otherwise)."""
+        x = jnp.stack([latents[k] for k in ks])
+        t_now = jnp.array([schedule[k][0] for k in ks], jnp.int32)
+        t_next = jnp.array([schedule[k][1] for k in ks], jnp.int32)
+        dt = 0.0
+        if timed:
+            # timing must be side-effect-free: `y` IS this batch's
+            # one step (also the compile warm-up); the timed call
+            # re-runs the same inputs for a steady-state reading and
+            # its result is discarded, so timed and untimed runs
+            # produce identical images (tests/test_diffusion.py)
+            y = self._step(x, t_now, t_next)
+            y.block_until_ready()
+            t0 = time.perf_counter()
+            self._step(x, t_now, t_next).block_until_ready()
+            dt = time.perf_counter() - t0
+            x = y
+        else:
+            x = self._step(x, t_now, t_next)
+        for i, k in enumerate(ks):
+            latents[k] = x[i]
+        return dt
 
     def measure_delay_curve(self, key, batch_sizes=range(1, 17),
                             reps: int = 3) -> List[Tuple[int, float]]:
@@ -101,3 +109,81 @@ class BatchDenoisingExecutor:
                 best = min(best, time.perf_counter() - t0)
             out.append((int(X), best))
         return out
+
+
+class DenoiseSession:
+    """One plan execution, one batch at a time (the diffusion entry of
+    the EXECUTORS registry — see ``repro.api.execution``).
+
+    Latents are seeded per service from ``jax.random.split(key)`` in
+    sorted-id order (identical to the one-shot ``run``), and each
+    service carries its *remaining* DDIM timesteps.  ``retarget`` swaps
+    those remaining timesteps for a fresh evenly-spaced chain when a
+    mid-flight replan changes a service's total step count; services
+    retired at zero steps keep their noise latent untouched and are
+    never batched.
+    """
+
+    def __init__(self, executor: BatchDenoisingExecutor, plan: BatchPlan,
+                 key):
+        self.executor = executor
+        cfg = executor.cfg
+        shape = (cfg.image_size, cfg.image_size, cfg.in_channels)
+        ids = sorted(plan.steps_completed)
+        keys = jax.random.split(key, max(len(ids), 1))
+        self.latents = {k: jax.random.normal(kk, shape, jnp.float32)
+                        for k, kk in zip(ids, keys)}
+        self.steps_done: Dict[int, int] = {k: 0 for k in ids}
+        # remaining timesteps, next-to-run first; [] = done denoising
+        self._remaining: Dict[int, List[int]] = {
+            k: list(ddim.ddim_timesteps(T, executor.T_train)) if T > 0
+            else []
+            for k, T in plan.steps_completed.items()}
+
+    def run_batch(self, ks: List[int], timed: bool = False) -> float:
+        """Advance each service in ``ks`` by one step of its remaining
+        schedule, in one batched U-Net call.  Returns the measured
+        wall-clock seconds when ``timed`` (0.0 otherwise)."""
+        schedule = {}
+        for k in ks:
+            rem = self._remaining[k]
+            if not rem:
+                raise ValueError(
+                    f"service {k} has no remaining denoising steps")
+            schedule[k] = (rem[0], rem[1] if len(rem) > 1 else -1)
+        dt = self.executor.step_batch(self.latents, schedule, list(ks),
+                                      timed)
+        for k in ks:
+            self._remaining[k].pop(0)
+            self.steps_done[k] += 1
+        return dt
+
+    def retarget(self, totals: Dict[int, int]) -> None:
+        """Re-aim services at new TOTAL step counts (executed steps
+        included — the no-resurrection crediting of ``_ServerTrack``).
+        A total equal to ``steps_done`` retires the service where it
+        stands; a total below it, or new steps for a fully denoised
+        chain, is a resurrection and raises."""
+        for k, total in totals.items():
+            done = self.steps_done[k]
+            extra = int(total) - done
+            if extra < 0:
+                raise ValueError(
+                    f"service {k}: retarget total {total} < "
+                    f"{done} steps already executed")
+            if extra == 0:
+                self._remaining[k] = []
+            elif done == 0:
+                self._remaining[k] = list(
+                    ddim.ddim_timesteps(extra, self.executor.T_train))
+            elif not self._remaining[k]:
+                raise ValueError(
+                    f"service {k} already fully denoised; cannot "
+                    f"schedule {extra} more steps")
+            else:
+                self._remaining[k] = list(ddim.retarget_timesteps(
+                    self._remaining[k][0], extra))
+
+    def finish(self) -> Dict[int, np.ndarray]:
+        """Final images (zero-step services: their untouched latent)."""
+        return {k: np.asarray(v) for k, v in self.latents.items()}

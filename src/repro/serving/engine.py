@@ -148,6 +148,42 @@ class ServingEngine:
                     lambda ax, x: x[_slice_at(x.ndim, ax, i)],
                     self._batch_axes, cache)
 
+    def step_batch(self, rids: List[int], timed: bool = False) -> float:
+        """One batched decode step for ``rids``: gather their B=1 KV
+        caches, decode, scatter back, append the argmax token.  Returns
+        the steady-state wall-clock seconds when ``timed`` (also logged
+        to ``self.last_timings``); 0.0 otherwise."""
+        self._ensure_prefilled(rids)
+        caches = [self.requests[rid].cache for rid in rids]
+        stacked = jax.tree_util.tree_map(
+            lambda ax, *xs: jnp.concatenate(xs, axis=ax),
+            self._batch_axes, *caches)
+        last = np.stack(
+            [[self.requests[rid].generated[-1]
+              if self.requests[rid].generated
+              else self.requests[rid].prompt[-1]] for rid in rids])
+        toks = jnp.asarray(last, jnp.int32)
+        dt = 0.0
+        if timed:
+            warm = self._decode(self.params, toks, stacked, self.extras)
+            jax.block_until_ready(warm)
+            t0 = time.perf_counter()
+            out = self._decode(self.params, toks, stacked, self.extras)
+            jax.block_until_ready(out)
+            dt = time.perf_counter() - t0
+            self.last_timings.append((len(rids), dt))
+            logits, stacked = out
+        else:
+            logits, stacked = self._decode(self.params, toks,
+                                           stacked, self.extras)
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        for i, rid in enumerate(rids):
+            self.requests[rid].generated.append(int(nxt[i]))
+            self.requests[rid].cache = jax.tree_util.tree_map(
+                lambda ax, x: x[_slice_at(x.ndim, ax, i)],
+                self._batch_axes, stacked)
+        return dt
+
     def execute(self, plan: BatchPlan, sample_key=None,
                 timed: bool = False) -> Dict[int, list]:
         """Run the plan: one batched decode_step per plan batch.
@@ -158,39 +194,56 @@ class ServingEngine:
         """
         self.last_timings = []
         for batch in plan.batches:
-            rids = [k for k, _ in batch]
-            self._ensure_prefilled(rids)
-            caches = [self.requests[rid].cache for rid in rids]
-            stacked = jax.tree_util.tree_map(
-                lambda ax, *xs: jnp.concatenate(xs, axis=ax),
-                self._batch_axes, *caches)
-            last = np.stack(
-                [[self.requests[rid].generated[-1]
-                  if self.requests[rid].generated
-                  else self.requests[rid].prompt[-1]] for rid in rids])
-            toks = jnp.asarray(last, jnp.int32)
-            if timed:
-                warm = self._decode(self.params, toks, stacked, self.extras)
-                jax.block_until_ready(warm)
-                t0 = time.perf_counter()
-                out = self._decode(self.params, toks, stacked, self.extras)
-                jax.block_until_ready(out)
-                self.last_timings.append(
-                    (len(rids), time.perf_counter() - t0))
-                logits, stacked = out
-            else:
-                logits, stacked = self._decode(self.params, toks,
-                                               stacked, self.extras)
-            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
-            for i, rid in enumerate(rids):
-                self.requests[rid].generated.append(int(nxt[i]))
-                self.requests[rid].cache = jax.tree_util.tree_map(
-                    lambda ax, x: x[_slice_at(x.ndim, ax, i)],
-                    self._batch_axes, stacked)
+            self.step_batch([k for k, _ in batch], timed=timed)
         return {rid: r.generated for rid, r in self.requests.items()}
+
+    def open_session(self, plan: BatchPlan) -> "DecodeSession":
+        """Stepwise execution handle for the EXECUTORS registry (see
+        ``repro.api.execution``): the closed loop drives one
+        ``run_batch`` at a time and may retarget token totals between
+        batches."""
+        self.last_timings = []
+        return DecodeSession(self, plan)
 
     def serve(self) -> Dict[int, list]:
         return self.execute(self.plan())
+
+
+class DecodeSession:
+    """One plan execution on a ``ServingEngine``, batch by batch.
+
+    Decoding is memoryless per step (no schedule table to rebuild), so
+    ``retarget`` only has to validate the new token totals against the
+    KV-cache capacity and the no-resurrection rule.
+    """
+
+    def __init__(self, engine: ServingEngine, plan: BatchPlan):
+        self.engine = engine
+        self.steps_done: Dict[int, int] = {
+            k: 0 for k in plan.steps_completed}
+
+    def run_batch(self, rids: List[int], timed: bool = False) -> float:
+        dt = self.engine.step_batch(list(rids), timed=timed)
+        for k in rids:
+            self.steps_done[k] += 1
+        return dt
+
+    def retarget(self, totals: Dict[int, int]) -> None:
+        for k, total in totals.items():
+            if total < self.steps_done[k]:
+                raise ValueError(
+                    f"request {k}: retarget total {total} < "
+                    f"{self.steps_done[k]} tokens already decoded")
+            req = self.engine.requests[k]
+            if len(req.prompt) + int(total) > self.engine.max_len:
+                raise ValueError(
+                    f"request {k}: prompt {len(req.prompt)} + "
+                    f"{total} tokens exceeds max_len="
+                    f"{self.engine.max_len}")
+
+    def finish(self) -> Dict[int, list]:
+        return {k: list(self.engine.requests[k].generated)
+                for k in self.steps_done}
 
 
 def _slice_at(ndim: int, ax: int, i: int):

@@ -133,19 +133,19 @@ class TestCompareGate:
     def test_committed_baseline_gates_known_suites(self):
         """The repo baseline must only gate metrics the CI bench job
         actually produces (api, online, multiserver, churn, fleet,
-        planner_speed suites)."""
+        e2e, planner_speed suites)."""
         baseline = json.loads(
             (ROOT / "benchmarks" / "baseline.json").read_text())
         assert baseline["metrics"], "baseline must gate something"
         for name, spec in baseline["metrics"].items():
             assert name.split("_")[0] in ("online", "multiserver",
                                           "api", "churn", "offset",
-                                          "planner", "fleet")
+                                          "planner", "fleet", "e2e")
             assert spec["kind"] in ("flag", "lower_is_better")
         # every required suite is one the CI bench job runs (ci.yml)
         assert set(baseline["required_suites"]) == \
             {"api", "online", "multiserver", "churn", "fleet",
-             "planner_speed"}
+             "planner_speed", "e2e"}
 
     def test_fleet_flags_are_gated(self):
         """ISSUE 8 acceptance: the bench gate must pin the fleet

@@ -7,6 +7,7 @@ import pytest
 
 from repro.configs.ddim_cifar10 import SMOKE
 from repro.core.delay_model import DelayModel
+from repro.core.plan import BatchPlan
 from repro.core.quality_model import PowerLawFID
 from repro.core.service import make_scenario
 from repro.core.stacking import stacking
@@ -144,3 +145,79 @@ class TestExecutor:
                                                     plan.batches))
         for k in imgs_plain:
             np.testing.assert_array_equal(imgs_timed[k], imgs_plain[k])
+
+    def test_zero_step_service_returns_untouched_latent(self,
+                                                        unet_params):
+        """Regression: `run` used to force every service through
+        max(T_k, 1) steps, denoising services the planner had retired
+        at T_k = 0.  A zero-step service must never be batched and its
+        latent must come back exactly as seeded."""
+        plan = BatchPlan(batches=[[(1, 0)], [(1, 1)]],
+                         start_times=[0.0, 1.0],
+                         steps_completed={0: 0, 1: 2},
+                         delay=DelayModel())
+        ex = BatchDenoisingExecutor(SMOKE, unet_params)
+        key = jax.random.PRNGKey(13)
+        imgs, _ = ex.run(plan, key)
+        assert set(imgs) == {0, 1}
+        # service 0: the raw seeded noise, untouched (ids are seeded
+        # in sorted order, exactly as DenoiseSession does it)
+        k0 = jax.random.split(key, 2)[0]
+        raw = jax.random.normal(k0, (16, 16, 3), jnp.float32)
+        np.testing.assert_array_equal(imgs[0], np.asarray(raw))
+        assert not np.array_equal(imgs[1], np.asarray(
+            jax.random.normal(jax.random.split(key, 2)[1], (16, 16, 3),
+                              jnp.float32)))
+
+
+class TestDenoiseSession:
+    """The stepwise execution handle behind the EXECUTORS registry."""
+
+    def _plan(self, K=3, seed=2):
+        scn = make_scenario(K=K, tau_min=2, tau_max=4, seed=seed)
+        tp = tau_prime_of(scn, inv_se_allocate(scn))
+        return stacking(scn.services, tp, DelayModel(), PowerLawFID())
+
+    def test_session_matches_one_shot_run(self, unet_params):
+        plan = self._plan()
+        ex = BatchDenoisingExecutor(SMOKE, unet_params)
+        key = jax.random.PRNGKey(21)
+        want, _ = ex.run(plan, key)
+        sess = ex.open_session(plan, key)
+        for batch in plan.batches:
+            sess.run_batch([k for k, _ in batch])
+        got = sess.finish()
+        for k in want:
+            np.testing.assert_array_equal(got[k], want[k])
+
+    def test_retarget_no_resurrection(self, unet_params):
+        plan = self._plan()
+        ex = BatchDenoisingExecutor(SMOKE, unet_params)
+        sess = ex.open_session(plan, jax.random.PRNGKey(22))
+        k = min(plan.steps_completed)
+        sess.run_batch([k])
+        with pytest.raises(ValueError, match="already executed"):
+            sess.retarget({k: 0})
+        # retiring at exactly the executed count is legal...
+        sess.retarget({k: sess.steps_done[k]})
+        with pytest.raises(ValueError, match="no remaining"):
+            sess.run_batch([k])
+        # ...but re-growing a fully retired chain is a resurrection
+        with pytest.raises(ValueError, match="fully denoised"):
+            sess.retarget({k: sess.steps_done[k] + 3})
+
+    def test_retarget_mid_flight_completes(self, unet_params):
+        plan = self._plan(K=2, seed=3)
+        ex = BatchDenoisingExecutor(SMOKE, unet_params)
+        sess = ex.open_session(plan, jax.random.PRNGKey(23))
+        k = min(plan.steps_completed)
+        sess.run_batch([k])
+        total = sess.steps_done[k] + 2   # shrink/stretch to done+2
+        sess.retarget({k: total})
+        sess.run_batch([k])
+        sess.run_batch([k])
+        assert sess.steps_done[k] == total
+        with pytest.raises(ValueError, match="no remaining"):
+            sess.run_batch([k])
+        imgs = sess.finish()
+        assert np.isfinite(imgs[k]).all()

@@ -1,0 +1,258 @@
+"""Closed-loop plan execution: ``repro.core.execution`` +
+``repro.api.execution`` (sim-to-real loop on the simulated executor,
+plus the calibrate -> refit -> replan pieces)."""
+
+import numpy as np
+import pytest
+
+from repro.api import (OnlineProvisioner, Provisioner, execute_report,
+                       list_executors)
+from repro.core.delay_model import DelayModel, RollingDelayFit
+from repro.core.execution import SimulatedSession
+from repro.core.service import make_scenario
+
+TRUE = DelayModel(a=0.1, b=0.2)
+HALF = DelayModel(a=0.05, b=0.1)   # the planner's 2x-fast misestimate
+
+SIM_KW = {"executor": "simulated",
+          "executor_kwargs": {"true_delay": TRUE},
+          "min_batches": 2, "drift_tol": 0.2}
+
+
+def _provisioner(scn, delay=HALF, **kw):
+    return Provisioner(scn, scheduler="stacking_offset",
+                       allocator="inv_se", delay=delay,
+                       execute_kwargs=dict(SIM_KW, **kw))
+
+
+class TestDelayRefit:
+    def test_scaled(self):
+        m = DelayModel(a=0.2, b=0.4).scaled(0.5)
+        assert m.a == pytest.approx(0.1) and m.b == pytest.approx(0.2)
+
+    def test_refit_recovers_affine(self):
+        sizes = [1, 2, 4, 8]
+        m = DelayModel(a=1.0, b=1.0).refit(sizes,
+                                           [TRUE.g(x) for x in sizes])
+        assert m.a == pytest.approx(TRUE.a)
+        assert m.b == pytest.approx(TRUE.b)
+
+    def test_refit_single_size_scales(self):
+        prior = DelayModel(a=0.1, b=0.2)
+        m = prior.refit([4, 4], [2 * prior.g(4), 2 * prior.g(4)])
+        assert m.a == pytest.approx(0.2) and m.b == pytest.approx(0.4)
+
+    def test_refit_rejects_empty_and_mismatch(self):
+        with pytest.raises(ValueError):
+            DelayModel().refit([], [])
+        with pytest.raises(ValueError):
+            DelayModel().refit([1, 2], [0.1])
+
+    def test_rolling_fit_window(self):
+        fit = RollingDelayFit(window=4, prior=HALF)
+        assert not fit.ready
+        assert fit.model().g(2) == pytest.approx(HALF.g(2))
+        for x in (1, 2, 3, 4, 5):
+            fit.observe(x, TRUE.g(x))
+        assert fit.ready and len(fit) == 4     # oldest rolled out
+        m = fit.model()
+        assert m.a == pytest.approx(TRUE.a)
+        assert m.b == pytest.approx(TRUE.b)
+        assert fit.model(headroom=1.5).g(3) == \
+            pytest.approx(1.5 * m.g(3))
+
+
+class TestSimulatedSession:
+    def test_runs_and_credits(self):
+        scn = make_scenario(K=3, seed=0)
+        rep = _provisioner(scn).run(execute=False)
+        sess = SimulatedSession(rep.plan, TRUE)
+        batch = [k for k, _ in rep.plan.batches[0]]
+        dt = sess.run_batch(batch, timed=True)
+        assert dt == pytest.approx(TRUE.g(len(batch)))
+        assert all(sess.steps_done[k] == 1 for k in batch)
+
+    def test_exhausted_steps_raise(self):
+        scn = make_scenario(K=2, seed=0)
+        rep = _provisioner(scn).run(execute=False)
+        sess = SimulatedSession(rep.plan, TRUE)
+        k = next(iter(rep.plan.steps_completed))
+        for _ in range(rep.plan.steps_completed[k]):
+            sess.run_batch([k])
+        with pytest.raises(ValueError, match="no remaining"):
+            sess.run_batch([k])
+
+    def test_retarget_no_resurrection(self):
+        scn = make_scenario(K=2, seed=0)
+        rep = _provisioner(scn).run(execute=False)
+        sess = SimulatedSession(rep.plan, TRUE)
+        k = next(iter(rep.plan.steps_completed))
+        sess.run_batch([k])
+        with pytest.raises(ValueError, match="retarget"):
+            sess.retarget({k: 0})
+
+
+class TestExecutionLoop:
+    def test_open_loop_runs_plan_as_given(self):
+        scn = make_scenario(K=5, seed=1)
+        rep = _provisioner(scn).run(execute="open")
+        ex = rep.execution
+        assert ex.mode == "open" and ex.replans == 0
+        assert len(ex.records) == rep.plan.num_batches
+        assert [r.size for r in ex.records] == \
+            [len(b) for b in rep.plan.batches]
+        assert ex.wall_clock == pytest.approx(
+            sum(r.measured_s for r in ex.records))
+        # deterministic session: every batch took exactly g_true(X)
+        for r in ex.records:
+            assert r.measured_s == pytest.approx(TRUE.g(r.size))
+
+    def test_final_refit_in_both_modes(self):
+        """result.delay reflects the measured hardware, so
+        predicted_wall agrees with wall_clock even open loop."""
+        scn = make_scenario(K=5, seed=1)
+        for mode in ("open", "closed"):
+            ex = _provisioner(scn).run(execute=mode).execution
+            assert ex.refits >= 1
+            assert ex.predicted_wall() == pytest.approx(ex.wall_clock,
+                                                        rel=1e-6)
+
+    def test_closed_beats_open_under_misestimate(self):
+        """The tentpole claim: under a 2x-slow hardware reality the
+        closed loop replans and delivers, the open loop overruns."""
+        scn = make_scenario(K=5, seed=1)
+        open_ex = _provisioner(scn).run(execute="open").execution
+        closed_ex = _provisioner(scn).run(execute="closed").execution
+        assert closed_ex.replans >= 1 and closed_ex.refits >= 1
+        assert closed_ex.delivered_fid < open_ex.delivered_fid
+        assert closed_ex.outage_rate < open_ex.outage_rate
+
+    def test_no_drift_no_replan(self):
+        """A perfect delay model never triggers a replan."""
+        scn = make_scenario(K=5, seed=1)
+        ex = _provisioner(scn, delay=TRUE).run(execute="closed").execution
+        assert ex.replans == 0
+        assert ex.outage_rate == 0.0
+
+    def test_executed_log_monotone_no_resurrection(self):
+        scn = make_scenario(K=6, seed=2)
+        ex = _provisioner(scn).run(execute="closed").execution
+        seen = {}
+        for t, k, steps in ex.executed_log:
+            assert steps == seen.get(k, 0) + 1    # one step per entry
+            seen[k] = steps
+        by_id = {o.id: o for o in ex.outcomes}
+        # content (the simulated session's step counts) == credited
+        assert ex.content == {k: by_id[k].steps for k in ex.content}
+        times = [t for t, _, _ in ex.executed_log]
+        assert times == sorted(times)
+
+    def test_telemetry_timings_shape(self):
+        scn = make_scenario(K=4, seed=3)
+        rep = _provisioner(scn).run(execute="closed")
+        ex = rep.execution
+        assert rep.timings == ex.timings
+        assert all(x >= 1 and s > 0 for x, s in ex.timings)
+        d = ex.to_dict()
+        assert d["kind"] == "execution"
+        assert d["telemetry"]["batches"] == len(ex.records)
+
+    def test_noise_does_not_break_loop(self):
+        scn = make_scenario(K=5, seed=4)
+        ex = _provisioner(
+            scn, executor_kwargs={"true_delay": TRUE, "noise": 0.1,
+                                  "seed": 7}).run(
+            execute="closed").execution
+        assert np.isfinite(ex.delivered_fid)
+        assert ex.wall_clock > 0
+
+    def test_mode_validation(self):
+        scn = make_scenario(K=3, seed=0)
+        with pytest.raises(ValueError, match="execute"):
+            _provisioner(scn).run(execute="sideways")
+        with pytest.raises(ValueError, match="execute"):
+            Provisioner(scn, execute="sideways")
+
+
+class TestExecuteReport:
+    def test_from_report(self):
+        scn = make_scenario(K=4, seed=5)
+        rep = _provisioner(scn).run(execute=False)
+        ex = execute_report(rep, mode="closed", executor="simulated",
+                            executor_kwargs={"true_delay": TRUE},
+                            min_batches=2, drift_tol=0.2)
+        assert ex.mode == "closed"
+        assert len(ex.records) > 0
+
+    def test_registry_names(self):
+        assert {"diffusion", "llm_decode", "simulated"} <= \
+            set(list_executors())
+
+
+class TestOnlineReplay:
+    def test_execute_true_replays_committed_batches(self):
+        scn = make_scenario(K=6, arrival_rate=0.5, seed=6)
+        p = OnlineProvisioner(
+            scn, scheduler="stacking_offset", allocator="inv_se",
+            delay=TRUE,
+            execute_kwargs={"executor": "simulated",
+                            "executor_kwargs": {"true_delay": TRUE}})
+        rep = p.run(execute=True)
+        assert rep.result.executed_batches is not None
+        assert len(rep.timings) == len(rep.result.executed_batches)
+        # the replayed sessions' step counts match the online outcomes
+        steps = {o.id: o.steps for o in rep.result.outcomes}
+        assert rep.content == {k: steps[k] for k in rep.content}
+
+    def test_closed_mode_rejected_online(self):
+        scn = make_scenario(K=4, arrival_rate=0.5, seed=6)
+        p = OnlineProvisioner(scn, allocator="inv_se", delay=TRUE)
+        with pytest.raises(ValueError, match="replays"):
+            p.run(execute="closed")
+
+
+class TestCalibrateReplanDecode:
+    """The sim-to-real measurement loop on the tiny decode engine:
+    measured delay -> DelayModel.refit -> the replanned schedule
+    actually changes (the Fig.-1a calibrate -> replan satellite)."""
+
+    def test_measured_refit_changes_plan(self):
+        from repro.api import DecodeWorkload
+        workload = DecodeWorkload(max_len=32)
+        # raw least squares on a tiny engine can extrapolate a slightly
+        # negative slope; it still measures a positive per-step delay
+        raw = workload.calibrate(batch_sizes=(1, 2, 4), reps=2)
+        assert raw.g(1) > 0 and raw.g(4) > 0
+
+        # deadlines sized for the CPU-scale planning model: a handful
+        # of decode steps each, comfortably under max_len
+        scn = make_scenario(K=3, tau_min=0.15, tau_max=0.3,
+                            total_bandwidth_hz=4.0e5, seed=7)
+        p = Provisioner(scn, workload=workload, scheduler="stacking",
+                        allocator="inv_se", delay=workload.default_delay())
+        rep = p.run(execute=True, timed=True)
+        assert len(rep.timings) == rep.plan.num_batches
+
+        # the refit protocol clamps to a physical (a >= 0, b > 0) model
+        measured = rep.delay.refit([x for x, _ in rep.timings],
+                                   [s for _, s in rep.timings])
+        assert measured.a >= 0 and measured.b > 0
+        fast = Provisioner(scn, scheduler="stacking",
+                           allocator="inv_se", delay=measured)
+        slow = Provisioner(scn, scheduler="stacking",
+                           allocator="inv_se", delay=measured.scaled(4))
+        plan_fast = fast.run(execute=False).plan
+        plan_slow = slow.run(execute=False).plan
+        # 4x-slower model -> strictly fewer total steps fit the budget
+        assert sum(plan_slow.steps_completed.values()) < \
+            sum(plan_fast.steps_completed.values())
+
+    def test_report_refit_closes_the_loop(self):
+        """Timed simulated execution -> report.refit_delay recovers the
+        true model -> the next run plans with it."""
+        scn = make_scenario(K=5, seed=8)
+        p = _provisioner(scn)
+        rep = p.run(execute="open")
+        refit = rep.refit_delay()
+        assert refit.a == pytest.approx(TRUE.a, rel=1e-6)
+        assert refit.b == pytest.approx(TRUE.b, rel=1e-6)

@@ -1,0 +1,242 @@
+"""The unified facade surface (repro.api.base): shared kwargs, legacy
+positional shims, the ``provision`` front door, and the common
+``to_dict``/``summary`` report protocol."""
+
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import (FleetProvisioner, MultiServerProvisioner,
+                       OnlineProvisioner, Provisioner,
+                       make_fleet_scenario, provision)
+from repro.core.delay_model import DelayModel
+from repro.core.service import make_scenario
+
+DELAY = DelayModel(a=0.05, b=0.1)
+
+
+def _static(K=6, seed=0, **kw):
+    return make_scenario(K=K, seed=seed, **kw)
+
+
+class TestLegacyPositionalShims:
+    """Pre-unification positional constructor calls keep working, warn,
+    and produce bit-identical results to the keyword spelling."""
+
+    def test_provisioner_positional_warns_and_matches(self):
+        scn = _static()
+        with pytest.warns(DeprecationWarning, match="positional"):
+            old = Provisioner(scn, None, "stacking", "inv_se", DELAY)
+        new = Provisioner(scn, workload=None, scheduler="stacking",
+                          allocator="inv_se", delay=DELAY)
+        a, b = old.run(execute=False), new.run(execute=False)
+        assert a.mean_fid == b.mean_fid
+        assert a.plan.batches == b.plan.batches
+
+    def test_online_positional_warns_and_matches(self):
+        scn = _static(K=6, seed=1, arrival_rate=0.5)
+        with pytest.warns(DeprecationWarning, match="positional"):
+            old = OnlineProvisioner(scn, "stacking", "inv_se",
+                                    "admit_all", DELAY)
+        new = OnlineProvisioner(scn, scheduler="stacking",
+                                allocator="inv_se",
+                                admission="admit_all", delay=DELAY)
+        assert old.run().mean_fid == new.run().mean_fid
+
+    def test_multiserver_positional_warns_and_matches(self):
+        scn = _static(K=8, seed=2, n_servers=3,
+                      server_speed_range=(0.7, 1.3))
+        with pytest.warns(DeprecationWarning, match="positional"):
+            old = MultiServerProvisioner(scn, "least_loaded", "stacking",
+                                         "inv_se", DELAY)
+        new = MultiServerProvisioner(scn, placement="least_loaded",
+                                     scheduler="stacking",
+                                     allocator="inv_se", delay=DELAY)
+        assert old.run().mean_fid == new.run().mean_fid
+
+    def test_positional_keyword_conflict_raises(self):
+        scn = _static()
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            with pytest.raises(TypeError, match="multiple values"):
+                Provisioner(scn, None, "stacking",
+                            scheduler="stacking_offset")
+
+    def test_too_many_positionals_raise(self):
+        scn = _static()
+        with pytest.raises(TypeError, match="positional"):
+            Provisioner(scn, None, "stacking", "inv_se", DELAY, None,
+                        None, None, "extra")
+
+
+class TestSharedKwargs:
+    def test_seed_reaches_seeded_allocator(self):
+        scn = _static()
+        p = Provisioner(scn, allocator="pso", seed=5, delay=DELAY)
+        assert p.allocator_kwargs["seed"] == 5
+        # explicit allocator_kwargs seed wins over the facade seed
+        q = Provisioner(scn, allocator="pso", seed=5, delay=DELAY,
+                        allocator_kwargs={"seed": 9})
+        assert q.allocator_kwargs["seed"] == 9
+
+    def test_seed_skipped_for_unseeded_allocator(self):
+        p = Provisioner(_static(), allocator="inv_se", seed=5,
+                        delay=DELAY)
+        assert "seed" not in p.allocator_kwargs
+
+    def test_seed_determinism_pso(self):
+        scn = _static()
+        a = Provisioner(scn, allocator="pso", seed=3, delay=DELAY,
+                        allocator_kwargs={"iters": 5}).allocate()
+        b = Provisioner(scn, allocator="pso", seed=3, delay=DELAY,
+                        allocator_kwargs={"iters": 5}).allocate()
+        np.testing.assert_array_equal(a, b)
+
+    def test_fleet_seed_reseeds_arrivals(self):
+        fleet = make_fleet_scenario(n_cells=3, horizon=4.0, rate=1.0,
+                                    seed=0)
+        p = FleetProvisioner(fleet, seed=42)
+        assert p.fleet.seed == 42
+
+    def test_execute_validation_at_construction(self):
+        with pytest.raises(ValueError, match="execute"):
+            Provisioner(_static(), execute="sideways")
+
+    def test_fleet_execute_raises(self):
+        fleet = make_fleet_scenario(n_cells=2, horizon=2.0, rate=1.0)
+        with pytest.raises(NotImplementedError):
+            FleetProvisioner(fleet, execute=True).run()
+
+    def test_multiserver_execute_raises(self):
+        scn = _static(K=6, n_servers=2)
+        with pytest.raises(NotImplementedError, match="per cell"):
+            MultiServerProvisioner(scn, delay=DELAY).run(execute="closed")
+        with pytest.raises(NotImplementedError, match="per cell"):
+            MultiServerProvisioner(scn, delay=DELAY).run_online(
+                execute=True)
+
+
+class TestProvisionFrontDoor:
+    """provision() reproduces each facade's run() on fixed seeds."""
+
+    def test_static_scenario(self):
+        scn = _static()
+        want = Provisioner(scn, scheduler="stacking", allocator="inv_se",
+                           delay=DELAY).run(execute=False)
+        got = provision(scn, scheduler="stacking", allocator="inv_se",
+                        delay=DELAY, execute=False)
+        assert type(got) is type(want)
+        assert got.mean_fid == want.mean_fid
+        assert got.plan.batches == want.plan.batches
+
+    def test_dynamic_scenario_dispatches_online(self):
+        scn = _static(K=6, seed=1, arrival_rate=0.5)
+        want = OnlineProvisioner(scn, scheduler="stacking",
+                                 allocator="inv_se", delay=DELAY).run()
+        got = provision(scn, scheduler="stacking", allocator="inv_se",
+                        delay=DELAY)
+        assert type(got) is type(want)
+        assert got.mean_fid == want.mean_fid
+        assert got.result.executed_batches == \
+            want.result.executed_batches
+
+    def test_admission_kwarg_forces_online(self):
+        scn = _static()   # static, but admission= means online
+        got = provision(scn, allocator="inv_se", delay=DELAY,
+                        admission="deadline_feasible")
+        want = OnlineProvisioner(scn, allocator="inv_se", delay=DELAY,
+                                 admission="deadline_feasible").run()
+        assert type(got) is type(want)
+        assert got.mean_fid == want.mean_fid
+
+    def test_multiserver_static(self):
+        scn = _static(K=8, seed=2, n_servers=3,
+                      server_speed_range=(0.7, 1.3))
+        want = MultiServerProvisioner(scn, allocator="inv_se",
+                                      delay=DELAY).run()
+        got = provision(scn, allocator="inv_se", delay=DELAY)
+        assert type(got) is type(want)
+        assert got.mean_fid == want.mean_fid
+        np.testing.assert_array_equal(got.assignment, want.assignment)
+
+    def test_multiserver_online(self):
+        scn = _static(K=8, seed=3, n_servers=2, arrival_rate=0.5)
+        want = MultiServerProvisioner(scn, allocator="inv_se",
+                                      delay=DELAY).run_online(
+            admission="admit_all")
+        got = provision(scn, allocator="inv_se", delay=DELAY,
+                        admission="admit_all")
+        assert type(got) is type(want)
+        assert got.mean_fid == want.mean_fid
+
+    def test_fleet_scenario(self):
+        fleet = make_fleet_scenario(n_cells=3, horizon=4.0, rate=1.0,
+                                    seed=5)
+        want = FleetProvisioner(fleet, allocator="equal").run()
+        got = provision(fleet, allocator="equal")
+        assert type(got) is type(want)
+        assert got.mean_fid == want.mean_fid
+        assert got.result.arrivals == want.result.arrivals
+
+
+class TestReportProtocol:
+    """Every report kind serializes through the same to_dict shape."""
+
+    REQUIRED = {"kind", "mean_fid", "outage_rate", "makespan",
+                "components", "telemetry"}
+
+    def _check(self, d, kind):
+        assert self.REQUIRED <= set(d)
+        assert d["kind"] == kind
+        json.loads(json.dumps(d))     # round-trips as plain JSON
+
+    def test_provision_report(self):
+        rep = Provisioner(_static(), allocator="inv_se",
+                          delay=DELAY).run(execute=False)
+        d = rep.to_dict()
+        self._check(d, "provision")
+        assert d["components"]["allocator"] == "inv_se"
+        assert rep.summary()
+
+    def test_provision_report_with_execution(self):
+        rep = Provisioner(
+            _static(), scheduler="stacking_offset", allocator="inv_se",
+            delay=DELAY,
+            execute_kwargs={"executor": "simulated",
+                            "executor_kwargs": {
+                                "true_delay": DELAY.scaled(2)},
+                            "min_batches": 2}).run(execute="closed")
+        d = rep.to_dict()
+        self._check(d, "provision")
+        assert d["execution"]["kind"] == "execution"
+        assert "execution closed" in rep.summary()
+
+    def test_online_report(self):
+        rep = OnlineProvisioner(_static(K=6, seed=1, arrival_rate=0.5),
+                                allocator="inv_se", delay=DELAY).run()
+        d = rep.to_dict()
+        self._check(d, "online")
+        assert 0.0 <= d["reject_rate"] <= 1.0
+        assert d["makespan"] is None or d["makespan"] > 0
+        assert rep.summary()
+
+    def test_multi_reports(self):
+        scn = _static(K=8, seed=2, n_servers=3,
+                      server_speed_range=(0.7, 1.3))
+        ms = MultiServerProvisioner(scn, allocator="inv_se", delay=DELAY)
+        self._check(ms.run().to_dict(), "multi")
+        scn2 = _static(K=8, seed=3, n_servers=2, arrival_rate=0.5)
+        ms2 = MultiServerProvisioner(scn2, allocator="inv_se",
+                                     delay=DELAY)
+        self._check(ms2.run_online().to_dict(), "multi_online")
+
+    def test_fleet_report(self):
+        fleet = make_fleet_scenario(n_cells=3, horizon=4.0, rate=1.0,
+                                    seed=5)
+        rep = FleetProvisioner(fleet, allocator="equal").run()
+        d = rep.to_dict()
+        self._check(d, "fleet")
+        assert d["telemetry"]["arrivals"] == rep.result.arrivals
+        assert rep.summary()
