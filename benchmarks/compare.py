@@ -65,6 +65,7 @@ _SUITE_PREFIXES = (
     ("multiserver_", "multiserver"),
     ("fleet_", "fleet"),
     ("e2e_", "e2e"),
+    ("exec_", "e2e"),
     ("api_", "api"),
 )
 

@@ -57,3 +57,20 @@ def run(csv_rows):
     f_ssd = jax.jit(lambda *t: ssd_chunked(*t, chunk=128))
     csv_rows.append(("kern_ssd_chunked", _time(f_ssd, xs, a, bm, cm, h0),
                      "S=512"))
+
+    # batched DDIM step at the bucketed engine's power-of-two batch
+    # buckets (SMOKE U-Net, gather->step->scatter pool program) — the
+    # per-step cost Fig. 1a's delay model is fit over
+    from repro.configs.ddim_cifar10 import SMOKE
+    from repro.diffusion import unet
+    from repro.diffusion.executor import BatchDenoisingExecutor
+    from repro.models.params import init_params
+    params = init_params(unet.schema(SMOKE), jax.random.PRNGKey(1))
+    ex = BatchDenoisingExecutor(SMOKE, params)
+    curve = ex.measure_delay_curve(ks[3], batch_sizes=(2, 4, 8),
+                                   reps=3, exec_engine="bucketed")
+    compile_s = sum(s for _, s in ex.last_compile_log)
+    for X, best in curve:
+        csv_rows.append((f"kern_ddim_step_b{X}", best * 1e6,
+                         f"bucketed pool step, SMOKE unet, "
+                         f"compile_total={compile_s:.2f}s separate"))

@@ -17,6 +17,11 @@ Every facade — ``Provisioner``, ``OnlineProvisioner``,
                execution), "open" (ExecutionLoop, no replanning) or
                "closed" (ExecutionLoop with drift-triggered replanning)
 
+``execute_kwargs`` passes loop tuning through to ``execute_plan``
+(``window``, ``drift_tol``, ...) plus ``exec_engine=`` to pick the
+denoising session engine (``"dict"`` reference / ``"bucketed"``
+device-resident — docs/PERFORMANCE.md).
+
 ``provision(scenario, ...)`` is the single front door: it dispatches on
 scenario shape (fleet / multi-server / online / static) and reproduces
 the corresponding facade's ``run()`` output exactly.

@@ -106,6 +106,12 @@ class ProvisionReport:
             n_services=self.scenario.K)
         if self.execution is not None:
             d["execution"] = self.execution.to_dict()
+            # per-kernel attribution (ROADMAP follow-up from PR 9):
+            # measured wall-clock grouped by padded batch-shape bucket,
+            # so drift points at a groupnorm/attention shape regime
+            d["telemetry"]["exec_engine"] = d["execution"]["exec_engine"]
+            d["telemetry"]["per_bucket"] = \
+                d["execution"]["telemetry"]["per_bucket"]
         return d
 
 
@@ -117,7 +123,9 @@ class Provisioner(BaseProvisioner):
     ``engine``/``devices``/``seed``/``execute`` are the unified facade
     kwargs (``repro.api.base``); ``execute_kwargs`` tunes the closed
     loop (``window``, ``drift_tol``, ``min_batches``, ``max_replans``,
-    ``headroom``, ``executor``, ``executor_kwargs``)."""
+    ``headroom``, ``executor``, ``executor_kwargs``, plus
+    ``exec_engine="bucketed"`` to run the diffusion sessions on the
+    device-resident bucketed engine — docs/PERFORMANCE.md)."""
 
     _LEGACY = ("workload", "scheduler", "allocator", "delay", "quality",
                "allocator_kwargs", "engine")

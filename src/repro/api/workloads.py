@@ -31,11 +31,15 @@ class DiffusionWorkload:
     name = "diffusion"
 
     def __init__(self, cfg=None, params=None, executor=None,
-                 init_seed: int = 0):
+                 init_seed: int = 0,
+                 exec_engine: Optional[str] = None):
         self.cfg = cfg
         self.params = params
         self._executor = executor
         self.init_seed = init_seed
+        # denoising engine default for every session this workload
+        # opens ("dict"/"bucketed"; None = executor/process default)
+        self.exec_engine = exec_engine
 
     def _ex(self):
         if self._executor is None:
@@ -50,7 +54,8 @@ class DiffusionWorkload:
                 params = init_params(unet.schema(cfg),
                                      jax.random.PRNGKey(self.init_seed))
             self.cfg, self.params = cfg, params
-            self._executor = BatchDenoisingExecutor(cfg, params)
+            self._executor = BatchDenoisingExecutor(
+                cfg, params, exec_engine=self.exec_engine)
         return self._executor
 
     def default_delay(self) -> DelayModel:
@@ -61,32 +66,44 @@ class DiffusionWorkload:
 
     def measure_delay_curve(self, key: Optional[Any] = None,
                             batch_sizes: Sequence[int] = (1, 2, 4, 8),
-                            reps: int = 3):
-        """Fig. 1a raw data: steady-state per-step delay vs batch size."""
+                            reps: int = 3,
+                            exec_engine: Optional[str] = None):
+        """Fig. 1a raw data: steady-state per-step delay vs batch size.
+        Compile time never lands in the readings; the executor's
+        ``last_compile_log`` carries it separately."""
         import jax
         key = key if key is not None else jax.random.PRNGKey(1)
         return self._ex().measure_delay_curve(key, batch_sizes=batch_sizes,
-                                              reps=reps)
+                                              reps=reps,
+                                              exec_engine=exec_engine)
 
     def calibrate(self, key: Optional[Any] = None, *,
                   batch_sizes: Sequence[int] = (1, 2, 4, 8),
-                  reps: int = 3) -> DelayModel:
-        curve = self.measure_delay_curve(key, batch_sizes, reps)
+                  reps: int = 3,
+                  exec_engine: Optional[str] = None) -> DelayModel:
+        curve = self.measure_delay_curve(key, batch_sizes, reps,
+                                         exec_engine=exec_engine)
         return fit([c[0] for c in curve], [c[1] for c in curve])
 
     def execute(self, plan: BatchPlan, key: Optional[Any] = None,
-                *, timed: bool = False) -> WorkloadOutput:
+                *, timed: bool = False,
+                exec_engine: Optional[str] = None) -> WorkloadOutput:
         import jax
         key = key if key is not None else jax.random.PRNGKey(0)
-        images, timings = self._ex().run(plan, key, timed=timed)
+        images, timings = self._ex().run(plan, key, timed=timed,
+                                         exec_engine=exec_engine)
         return WorkloadOutput(content=images, timings=timings)
 
-    def open_session(self, plan: BatchPlan, key: Optional[Any] = None):
+    def open_session(self, plan: BatchPlan, key: Optional[Any] = None,
+                     exec_engine: Optional[str] = None):
         """Stepwise execution handle (EXECUTORS registry entry): the
-        closed loop in ``repro.core.execution`` drives batches itself."""
+        closed loop in ``repro.core.execution`` drives batches itself.
+        ``exec_engine`` overrides the workload-level engine for this
+        session."""
         import jax
         key = key if key is not None else jax.random.PRNGKey(0)
-        return self._ex().open_session(plan, key)
+        return self._ex().open_session(plan, key,
+                                       exec_engine=exec_engine)
 
 
 @register_workload("llm_decode")

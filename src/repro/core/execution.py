@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import os
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -47,6 +48,32 @@ from repro.core.service import Scenario
 from repro.core.simulator import ServiceOutcome
 
 _TIE = 1e-6   # deadline slack, matches repro.core.simulator
+
+#: Denoising execution engines (``repro.diffusion``): ``"dict"`` is the
+#: per-service-latent reference path, ``"bucketed"`` the device-resident
+#: padded-bucket engine (docs/PERFORMANCE.md, "The execution engine").
+EXEC_ENGINES = ("dict", "bucketed")
+
+
+def exec_engine_default() -> str:
+    """Process-default execution engine for the denoising executor —
+    the ``REPRO_EXEC_ENGINE`` environment variable, else ``"dict"``
+    (the bit-exact-per-row reference path)."""
+    return os.environ.get("REPRO_EXEC_ENGINE", "dict")
+
+
+def shape_bucket(n: int) -> int:
+    """Power-of-two padded batch-size bucket (min 2).
+
+    This is the shape grid the bucketed denoising executor compiles
+    one gather->DDIM-step->scatter program per, and the grid
+    ``ExecutionLoop`` telemetry groups measured per-batch wall-clock
+    by (so drift is attributable to ``groupnorm_silu`` /
+    ``flash_attention`` batch-shape regimes).  Plans whose batches
+    never exceed ``K_max`` services touch at most
+    ``ceil(log2(K_max))`` buckets — the trace bound the recompile
+    tests pin."""
+    return max(2, 1 << max(0, int(n - 1).bit_length()))
 
 
 class SimulatedSession:
@@ -90,6 +117,9 @@ class SimulatedSession:
     def finish(self) -> Dict[int, int]:
         return dict(self.steps_done)
 
+    def telemetry(self) -> dict:
+        return {"exec_engine": "simulated"}
+
 
 @dataclasses.dataclass
 class BatchRecord:
@@ -119,12 +149,33 @@ class ExecutionResult:
     refits: int
     mode: str
     executed_log: List[tuple]
+    exec_engine: str = ""                # engine the session reported
+    session_telemetry: Optional[dict] = None   # session.telemetry()
 
     @property
     def timings(self) -> List[tuple]:
         """(batch_size, seconds) telemetry — the shape
         ``ProvisionReport.refit_delay`` consumes."""
         return [(r.size, r.measured_s) for r in self.records]
+
+    def per_bucket(self) -> Dict[int, dict]:
+        """Measured per-batch wall-clock grouped by ``shape_bucket``:
+        ``{bucket: {batches, total_s, mean_s, min_s, predicted_s}}``.
+        Drift in one bucket and not another points at the kernels'
+        batch-shape regime (``groupnorm_silu`` / ``flash_attention``
+        specialize per padded batch shape), not at the affine model."""
+        out: Dict[int, dict] = {}
+        for r in self.records:
+            b = out.setdefault(shape_bucket(r.size), {
+                "batches": 0, "total_s": 0.0, "min_s": float("inf"),
+                "predicted_s": 0.0})
+            b["batches"] += 1
+            b["total_s"] += r.measured_s
+            b["min_s"] = min(b["min_s"], r.measured_s)
+            b["predicted_s"] += r.predicted_s
+        for b in out.values():
+            b["mean_s"] = b["total_s"] / b["batches"]
+        return out
 
     def predicted_wall(self, model: Optional[DelayModel] = None) -> float:
         """Sum of g(X_n) over the executed batch sizes under ``model``
@@ -153,11 +204,17 @@ class ExecutionResult:
             "replans": int(self.replans),
             "refits": int(self.refits),
             "delay": {"a": float(self.delay.a), "b": float(self.delay.b)},
+            "exec_engine": self.exec_engine,
             "telemetry": {
                 "batches": len(self.records),
                 "timings": [[int(s), float(d)] for s, d in self.timings],
                 "wall_clock": float(self.wall_clock),
                 "predicted_wall": float(self.predicted_wall()),
+                "per_bucket": {
+                    str(b): {k: (int(v) if k == "batches" else float(v))
+                             for k, v in agg.items()}
+                    for b, agg in sorted(self.per_bucket().items())},
+                "session": self.session_telemetry,
             },
         }
 
@@ -183,7 +240,8 @@ class ExecutionLoop:
                  window: int = 32, drift_tol: float = 0.25,
                  min_batches: int = 3, max_replans: int = 8,
                  headroom: float = 1.0, validate: bool = True,
-                 engine: Optional[str] = None):
+                 engine: Optional[str] = None,
+                 exec_engine: Optional[str] = None):
         if mode not in ("open", "closed"):
             raise ValueError(f"mode must be 'open' or 'closed', "
                              f"got {mode!r}")
@@ -203,6 +261,10 @@ class ExecutionLoop:
         self.headroom = float(headroom)
         self.validate = validate
         self.engine = engine
+        # the denoising-session engine the session was opened with —
+        # recorded for telemetry; the session itself (already built by
+        # the caller) is what actually implements it
+        self.exec_engine = exec_engine
 
         alloc = np.asarray(alloc, dtype=np.float64)
         self.alloc_map: Dict[int, float] = {
@@ -363,9 +425,14 @@ class ExecutionLoop:
         delivered = float(np.mean(
             [o.fid if o.met_deadline else fid0 for o in outcomes])) \
             if outcomes else float("nan")
+        tele_fn = getattr(self.session, "telemetry", None)
+        session_tele = tele_fn() if callable(tele_fn) else None
+        exec_engine = self.exec_engine or \
+            (session_tele or {}).get("exec_engine", "")
         return ExecutionResult(
             outcomes=outcomes, records=self.records, content=content,
             delay=self.delay, mean_fid=mean_fid, outage_rate=outage,
             delivered_fid=delivered, wall_clock=t, replans=self.replans,
             refits=self.refits, mode=self.mode,
-            executed_log=self.executed_log)
+            executed_log=self.executed_log, exec_engine=exec_engine,
+            session_telemetry=session_tele)

@@ -138,9 +138,12 @@ class TestCompareGate:
             (ROOT / "benchmarks" / "baseline.json").read_text())
         assert baseline["metrics"], "baseline must gate something"
         for name, spec in baseline["metrics"].items():
+            # "exec_*" rows come out of the e2e suite (the execution
+            # engine comparison), see _SUITE_PREFIXES in compare.py
             assert name.split("_")[0] in ("online", "multiserver",
                                           "api", "churn", "offset",
-                                          "planner", "fleet", "e2e")
+                                          "planner", "fleet", "e2e",
+                                          "exec")
             assert spec["kind"] in ("flag", "lower_is_better")
         # every required suite is one the CI bench job runs (ci.yml)
         assert set(baseline["required_suites"]) == \
@@ -395,6 +398,16 @@ class TestJsonWriter:
         assert payload["elapsed_s"] == 1.234
         assert payload["rows"][1] == {"name": "b", "value": 2.5,
                                       "derived": "y"}
+        # the active engines are stamped next to workers/devices so
+        # nightly refreshes can tell configuration trends apart
+        assert payload["engine"] in ("vec", "scalar", "jax")
+        assert payload["exec_engine"] in ("dict", "bucketed")
+
+    def test_write_json_exec_engine_env(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_EXEC_ENGINE", "bucketed")
+        path = bench_run.write_json(tmp_path / "out", "demo",
+                                    [], 0.1, "cafebabe")
+        assert json.loads(path.read_text())["exec_engine"] == "bucketed"
 
     def test_git_sha_is_nonempty(self):
         assert bench_run.git_sha()

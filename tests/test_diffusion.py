@@ -129,7 +129,9 @@ class TestExecutor:
         """Regression (ISSUE 5): timed mode used to re-run the step
         after the timing pair, advancing every batch TWO DDIM steps.
         Timing must be side-effect-free — identical images for a fixed
-        key, one timing entry per batch."""
+        key, one timing entry per batch.  Since ISSUE 10 the timed call
+        IS the only U-Net execution (AOT compile is separate), so a
+        timed run costs exactly one dispatch per batch, not two."""
         delay, quality = DelayModel(), PowerLawFID()
         scn = make_scenario(K=3, tau_min=2, tau_max=4, seed=2)
         tp = tau_prime_of(scn, inv_se_allocate(scn))
@@ -137,7 +139,9 @@ class TestExecutor:
         assert plan.num_batches > 0
         ex = BatchDenoisingExecutor(SMOKE, unet_params)
         key = jax.random.PRNGKey(11)
+        before = ex.dispatches
         imgs_timed, timings = ex.run(plan, key, timed=True)
+        assert ex.dispatches - before == plan.num_batches
         imgs_plain, no_timings = ex.run(plan, key)
         assert no_timings == []
         assert len(timings) == plan.num_batches

@@ -156,6 +156,30 @@ class TestExecutionLoop:
         d = ex.to_dict()
         assert d["kind"] == "execution"
         assert d["telemetry"]["batches"] == len(ex.records)
+        # the simulated session names its engine through telemetry
+        assert d["exec_engine"] == "simulated"
+        assert d["telemetry"]["session"] == {"exec_engine": "simulated"}
+
+    def test_per_bucket_telemetry(self):
+        """Per-kernel attribution: measured wall-clock grouped by the
+        padded batch-shape bucket, counts and totals consistent with
+        the raw records."""
+        from repro.core.execution import shape_bucket
+        scn = make_scenario(K=5, seed=1)
+        ex = _provisioner(scn).run(execute="closed").execution
+        pb = ex.per_bucket()
+        assert sum(b["batches"] for b in pb.values()) == len(ex.records)
+        assert sum(b["total_s"] for b in pb.values()) == \
+            pytest.approx(sum(r.measured_s for r in ex.records))
+        for bucket, agg in pb.items():
+            sizes = [r.size for r in ex.records
+                     if shape_bucket(r.size) == bucket]
+            assert len(sizes) == agg["batches"]
+            # float rounding: a bucket's mean can land an ulp under
+            # its min when every batch measured the same duration
+            assert agg["min_s"] <= agg["mean_s"] + 1e-9
+        d = ex.to_dict()["telemetry"]["per_bucket"]
+        assert set(d) == {str(b) for b in pb}
 
     def test_noise_does_not_break_loop(self):
         scn = make_scenario(K=5, seed=4)
